@@ -1,0 +1,26 @@
+"""Shared helpers for the paper-figure benchmarks."""
+import copy
+import time
+
+from repro.configs import get_config
+from repro.runtime.costmodel import CostModel, HardwareSpec
+
+
+def opt13b_cost():
+    cfg = get_config("opt_13b")
+    return cfg, CostModel(cfg, HardwareSpec.v100_tp2(),
+                          n_params=13_000_000_000)
+
+
+def timed(fn, *args, repeat=3, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeat, out
+
+
+def emit(rows):
+    """rows: list of (name, us_per_call, derived-str). Prints the CSV."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

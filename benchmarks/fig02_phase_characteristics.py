@@ -1,0 +1,27 @@
+"""Fig. 2 — prefill/decode phase characteristics.
+
+Prefill throughput flattens at the accelerator-saturate threshold while
+latency keeps rising; decode throughput grows with batch then plateaus
+when KV traffic saturates HBM bandwidth.
+"""
+from benchmarks.common import emit, opt13b_cost, timed
+
+
+def run():
+    cfg, cost = opt13b_cost()
+    rows = []
+    for toks in [64, 128, 256, 512, 1024, 2048, 4096]:
+        us, t = timed(cost.prefill_time, toks)
+        tput = toks / t
+        rows.append((f"fig02_prefill_tokens={toks}", us * 1e6,
+                     f"latency_ms={t*1e3:.1f};tput_tok_s={tput:.0f}"))
+    for batch in [1, 4, 16, 64, 128, 256]:
+        ctx = batch * 600
+        us, t = timed(cost.decode_time, batch, ctx)
+        rows.append((f"fig02_decode_batch={batch}", us * 1e6,
+                     f"iter_ms={t*1e3:.2f};tput_tok_s={batch/t:.0f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Fig. 3 — prefill x prefill interference: a light prefill's latency
+blows up as co-running prefill tokens push the batch past saturation;
+TetriInfer's fixed-size chunks cap it at one chunk time."""
+from benchmarks.common import emit, opt13b_cost, timed
+
+
+def run():
+    cfg, cost = opt13b_cost()
+    rows = []
+    lp = 18                   # ShareGPT short-prompt median (§2.2.1)
+    base = cost.prefill_time(lp)
+    for n_co, heavy in [(0, False), (7, False), (31, False), (63, False),
+                        (1, True), (3, True), (7, True)]:
+        co = n_co * (512 if heavy else 18)
+        us, t = timed(cost.prefill_time, lp + co)
+        rows.append((
+            f"fig03_light_prefill_co={n_co}{'heavy' if heavy else 'light'}",
+            us * 1e6, f"slowdown_x={t/base:.1f}"))
+    # chunked prefill bound: latency <= one ChunkSize iteration
+    t_chunk = cost.prefill_time(512)
+    rows.append(("fig03_chunked_bound", 0.0,
+                 f"chunk_ms={t_chunk*1e3:.1f};"
+                 f"max_slowdown_x={t_chunk/base:.1f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Fig. 4 — prefill x decode interference: one heavy prefill in a
+continuous batch multiplies decode iteration latency ~5x; prefill also
+slows when many decodes co-run (their KV traffic)."""
+from benchmarks.common import emit, opt13b_cost, timed
+
+
+def run():
+    cfg, cost = opt13b_cost()
+    rows = []
+    dec_base = cost.decode_time(8, 8 * 200)
+    for p_toks, tag in [(0, "none"), (18, "light"), (512, "heavy"),
+                        (2048, "2xheavy")]:
+        us, t = timed(cost.mixed_time, p_toks, 8, 8 * 200)
+        rows.append((f"fig04_decode_with_prefill={tag}", us * 1e6,
+                     f"decode_slowdown_x={t/dec_base:.1f}"))
+    pre_base = cost.prefill_time(18)
+    for n_dec in [0, 7, 15, 63]:
+        us, t = timed(cost.mixed_time, 18, n_dec, n_dec * 700)
+        rows.append((f"fig04_light_prefill_with_{n_dec}decodes", us * 1e6,
+                     f"prefill_slowdown_x={t/pre_base:.1f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

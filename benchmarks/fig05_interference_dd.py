@@ -1,0 +1,23 @@
+"""Fig. 5 — decode x decode interference: replacing light decodes with
+heavy ones in a batch cuts throughput and raises latency (KV bandwidth
++ capacity contention)."""
+from benchmarks.common import emit, opt13b_cost, timed
+
+
+def run():
+    cfg, cost = opt13b_cost()
+    rows = []
+    batch = 128
+    base_t = cost.decode_time(batch, batch * 60)     # all light (~60 ctx)
+    for frac_heavy in [0.0, 0.25, 0.5, 0.75, 1.0]:
+        heavy = int(batch * frac_heavy)
+        ctx = heavy * 700 + (batch - heavy) * 60
+        us, t = timed(cost.decode_time, batch, ctx)
+        rows.append((f"fig05_heavy_frac={frac_heavy}", us * 1e6,
+                     f"tput_drop_pct={100*(1-base_t/t):.0f};"
+                     f"latency_x={t/base_t:.2f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Figs. 11-15 — end-to-end TetriInfer vs vanilla-vLLM on the five
+workloads (LPLD/LPHD/HPLD/HPHD/Mixed): avg TTFT, avg JCT, resource usage
+time, perf/$.  Paper-claim deltas are printed alongside for EXPERIMENTS.md.
+"""
+import copy
+import time
+
+from benchmarks.common import emit, opt13b_cost
+from repro.runtime.simulator import CoupledSimulator, DisaggSimulator
+from repro.runtime.workload import generate
+
+PAPER = {  # (dTTFT %, dJCT %, perf/$ x) from §5.1
+    "LPLD": (44, 40, 1.4), "LPHD": (97, 47, 2.4), "HPLD": (-9, 23, 0.86),
+    "HPHD": (19, 19, 1.1), "Mixed": (85, 50, 1.9)}
+
+
+def run(n_requests: int = 128, seed: int = 0):
+    cfg, cost = opt13b_cost()
+    rows = []
+    for wl in ["LPLD", "LPHD", "HPLD", "HPHD", "Mixed"]:
+        reqs = generate(wl, n_requests, seed=seed)
+        t0 = time.perf_counter()
+        ra = CoupledSimulator(cfg, cost, n_instances=2, prefill_batch=16,
+                              max_batch=16).run(copy.deepcopy(reqs))
+        rb = DisaggSimulator(cfg, cost, n_prefill=1, n_decode=1,
+                             max_batch=64, enable_flip=True,
+                             flip_idle_s=1.0).run(copy.deepcopy(reqs))
+        us = (time.perf_counter() - t0) * 1e6
+        ma, mb = ra.metrics, rb.metrics
+        d_ttft = 100 * (1 - mb["avg_ttft"] / ma["avg_ttft"])
+        d_jct = 100 * (1 - mb["avg_jct"] / ma["avg_jct"])
+        ppd = rb.perf_per_dollar / ra.perf_per_dollar
+        rows.append((
+            f"fig11_15_{wl}", us,
+            f"vllm_ttft_s={ma['avg_ttft']:.2f};tetri_ttft_s="
+            f"{mb['avg_ttft']:.2f};dTTFT_pct={d_ttft:.0f};"
+            f"dJCT_pct={d_jct:.0f};perf_per_dollar_x={ppd:.2f};"
+            f"paper={PAPER[wl]};flips={rb.flips}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Fig. 17 — length-predictor co-run: the predict model is ~10x faster
+than the target LLM; parallel-mode co-run costs the main LLM ~10%
+latency / ~12% throughput under stress (cost-model + real tiny-model
+measurement)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, opt13b_cost
+from repro.configs import get_config, get_smoke_config
+from repro.models import model as M
+from repro.runtime.costmodel import CostModel, HardwareSpec
+
+
+def run():
+    rows = []
+    # analytic: OPT-125M vs OPT-13B per-iteration prefill cost
+    tgt_cfg, tgt_cost = opt13b_cost()
+    pred_cfg = get_config("opt_125m_cls")
+    pred_cost = CostModel(pred_cfg, HardwareSpec.v100_tp2(),
+                          n_params=125_000_000)
+    t_l = tgt_cost.prefill_time(512)
+    t_p = pred_cost.prefill_time(512)
+    rows.append(("fig17_latency_ratio", 0.0,
+                 f"target_ms={t_l*1e3:.1f};predict_ms={t_p*1e3:.1f};"
+                 f"ratio_x={t_l/t_p:.1f}"))
+    rows.append(("fig17_corun_penalty", 0.0,
+                 f"latency_overhead_pct={100*(tgt_cost.predictor_overhead(True)-1):.0f};"
+                 "paper=10pct_latency_12pct_tput"))
+    # real CPU measurement on the smoke pair
+    cfg_l = get_smoke_config("opt_13b")
+    cfg_s = get_smoke_config("opt_125m_cls")
+    pl = M.init_params(jax.random.PRNGKey(0), cfg_l)
+    ps = M.init_params(jax.random.PRNGKey(1), cfg_s)
+    toks = jnp.ones((1, 64), jnp.int32)
+    lens = jnp.array([64], jnp.int32)
+    f_l = jax.jit(lambda p, t: M.forward_train(p, cfg_l, t)[0])
+    f_s = jax.jit(lambda p, t, ln: M.classify(p, cfg_s, t, ln))
+    f_l(pl, toks).block_until_ready()
+    f_s(ps, toks, lens).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        f_l(pl, toks).block_until_ready()
+    tl = (time.perf_counter() - t0) / 5
+    t0 = time.perf_counter()
+    for _ in range(5):
+        f_s(ps, toks, lens).block_until_ready()
+    ts = (time.perf_counter() - t0) / 5
+    rows.append(("fig17_real_smoke_pair", tl * 1e6,
+                 f"target_us={tl*1e6:.0f};predict_us={ts*1e6:.0f};"
+                 f"ratio_x={tl/ts:.1f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""§5.2.2 — predictor accuracy vs granularity (100/200/400): fine-tune
+the reduced OPT-125M classifier on the synthetic ShareGPT-like dataset
+and evaluate bucket accuracy (paper: 58.9% / 74.9% / 85%)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.train import data as D
+from repro.train import optimizer as opt
+from repro.train import trainer
+
+
+def run(steps=60, n_data=512):
+    rows = []
+    for gran in [100, 200, 400]:
+        n_classes = max(2, 2048 // gran)
+        import dataclasses
+        cfg = dataclasses.replace(get_smoke_config("opt_125m_cls"),
+                                  n_classes=n_classes, dtype="float32")
+        toks, lens, labels = D.predictor_dataset(
+            n_data, vocab=cfg.vocab_size, granularity=gran,
+            n_classes=n_classes, seed=gran)
+        split = int(0.8 * n_data)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        state = opt.init(params)
+        step = jax.jit(trainer.make_cls_train_step(
+            cfg, opt.AdamWConfig(lr=3e-3, warmup_steps=10,
+                                 total_steps=steps, weight_decay=0.0)))
+        t0 = time.perf_counter()
+        it = D.batched((toks[:split], lens[:split], labels[:split]), 64,
+                       seed=1)
+        for i, (bt, bl, by) in zip(range(steps), it):
+            params, state, loss, acc = step(params, state,
+                                            jnp.asarray(bt),
+                                            jnp.asarray(bl),
+                                            jnp.asarray(by))
+        us = (time.perf_counter() - t0) / steps * 1e6
+        ev = M.classify(params, cfg, jnp.asarray(toks[split:]),
+                        jnp.asarray(lens[split:]))
+        acc = float((jnp.argmax(ev, -1) == jnp.asarray(
+            labels[split:])).mean())
+        chance = 1.0 / n_classes
+        rows.append((f"predictor_gran={gran}", us,
+                     f"accuracy_pct={100*acc:.1f};chance_pct="
+                     f"{100*chance:.1f};paper_pct="
+                     f"{ {100:58.9, 200:74.9, 400:85.0}[gran] }"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""§Roofline — render the dry-run results (results/dryrun/*.json) into
+the per-(arch x shape x mesh) roofline table for EXPERIMENTS.md: the
+three terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and what would
+move the dominant term down.
+"""
+import glob
+import json
+import os
+
+HBM_PER_CHIP = 16e9   # TPU v5e
+
+SUGGESTION = {
+    "compute": "raise per-chip math: larger microbatch/chunk, bf16 "
+               "everywhere, fuse small ops into the MXU matmuls",
+    "memory": "cut resident traffic: smaller KV (window/MLA/quant), "
+              "shard KV/cache wider, reuse weights across more tokens",
+    "collective": "reshard: avoid uneven-head gathers (2D batch-sharded "
+                  "attention), overlap collectives, reduce-scatter grads, "
+                  "seq-shard activations between layers",
+}
+
+
+def load(out_dir="results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def render(recs, mesh_filter="16x16"):
+    lines = []
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "bottleneck | useful FLOPs | fits HBM |")
+    lines.append(hdr)
+    lines.append("|" + "---|" * 8)
+    for r in recs:
+        if r.get("mesh") != mesh_filter:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped: {r['reason'][:40]} | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        per_chip = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+                    + mem.get("output_bytes", 0))
+        fits = "yes" if per_chip <= HBM_PER_CHIP else \
+            f"NO ({per_chip/1e9:.0f}GB)"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{fits} |")
+    return "\n".join(lines)
+
+
+def run():
+    recs = load()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    rows = []
+    for r in ok:
+        t = r["roofline"]
+        dom = r["bottleneck"]
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+            f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+            f"collective_s={t['collective_s']:.4f};bottleneck={dom};"
+            f"useful={r['useful_flops_ratio']:.2f}"))
+    from benchmarks.common import emit
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    recs = load()
+    print(render(recs, "16x16"))
+    print()
+    print(render(recs, "2x16x16"))

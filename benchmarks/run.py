@@ -1,0 +1,51 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper figure/table (DESIGN.md §6).
+
+``python -m benchmarks.run``            — run everything
+``python -m benchmarks.run fig16 fig18`` — run a subset by prefix
+"""
+import sys
+import traceback
+
+from benchmarks import (fig02_phase_characteristics, fig03_interference_pp,
+                        fig04_interference_pd, fig05_interference_dd,
+                        fig11_15_end_to_end, fig16_prefill_sched,
+                        fig17_predictor_overhead, fig18_decode_sched,
+                        fig19_load_balance, flip_latency,
+                        predictor_accuracy, roofline_report)
+
+ALL = [
+    ("fig02", fig02_phase_characteristics.run),
+    ("fig03", fig03_interference_pp.run),
+    ("fig04", fig04_interference_pd.run),
+    ("fig05", fig05_interference_dd.run),
+    ("fig11_15", fig11_15_end_to_end.run),
+    ("fig16", fig16_prefill_sched.run),
+    ("fig17", fig17_predictor_overhead.run),
+    ("fig18", fig18_decode_sched.run),
+    ("fig19", fig19_load_balance.run),
+    ("predictor_accuracy", predictor_accuracy.run),
+    ("flip_latency", flip_latency.run),
+    ("roofline", roofline_report.run),
+]
+
+
+def main() -> None:
+    wanted = sys.argv[1:]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in ALL:
+        if wanted and not any(name.startswith(w) for w in wanted):
+            continue
+        try:
+            fn()
+        except Exception as e:  # keep the harness running
+            failures.append(name)
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,48 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the full-size ModelConfig;
+``get_smoke_config(arch_id)`` the reduced same-family variant used by the
+CPU smoke tests (2+ layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, reduced
+
+ARCH_IDS = (
+    "qwen2_0_5b",
+    "llama_3_2_vision_11b",
+    "phi4_mini_3_8b",
+    "recurrentgemma_9b",
+    "whisper_tiny",
+    "xlstm_1_3b",
+    "deepseek_v2_236b",
+    "mistral_nemo_12b",
+    "deepseek_67b",
+    "granite_moe_3b_a800m",
+    # the paper's own model pair (OPT-13B target + OPT-125M predictor)
+    "opt_13b",
+    "opt_125m_cls",
+)
+
+ASSIGNED_ARCHS = ARCH_IDS[:10]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def canonical(arch_id: str) -> str:
+    key = arch_id.replace("-", "_").replace(".", "_")
+    return _ALIASES.get(arch_id, key)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch_id)}")
+    return mod.config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch_id)}")
+    if hasattr(mod, "smoke"):
+        return mod.smoke()
+    return reduced(get_config(arch_id))

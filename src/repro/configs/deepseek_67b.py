@@ -1,0 +1,15 @@
+"""DeepSeek-67B [dense] — llama-arch GQA [arXiv:2401.02954]."""
+from repro.models.config import ATTN, ModelConfig, reduced
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-67b", n_layers=95, d_model=8192, n_heads=64,
+        n_kv_heads=8, d_ff=22016, vocab_size=102400, head_dim=128,
+        pattern=(ATTN,), rope_theta=10_000.0, mlp_act="swiglu",
+        tie_embeddings=False,
+        source="arXiv:2401.02954 (DeepSeek LLM)")
+
+
+def smoke() -> ModelConfig:
+    return reduced(config(), layers=2, d_model=256, n_heads=4, n_kv_heads=2)

@@ -1,0 +1,120 @@
+"""Decode instance (paper §3.4): receiver -> working-set-aware local
+scheduler -> continuous-batching decode engine.
+
+Slot-based continuous batching: a fixed-capacity slot batch (XLA-friendly
+static shapes) with a validity mask; the admission policy (greedy /
+reserve-static / reserve-dynamic) decides which queued requests join each
+iteration against the paged-KV allocator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decode_types import FinishedRequest
+from repro.core.sched.decode_scheduler import DecodeScheduler
+from repro.kvcache.paged import PagedAllocator
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.runtime.request import Phase, Request
+
+
+@dataclasses.dataclass
+class SlotState:
+    req: Request
+    last_token: int
+    tokens: List[int]
+
+
+class DecodeEngine:
+    def __init__(self, iid: str, cfg: ModelConfig, params, *,
+                 max_slots: int = 8, max_seq: int = 512,
+                 policy: str = "reserve-dynamic",
+                 n_pages: int = 512, page_size: int = 16):
+        self.iid = iid
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.alloc = PagedAllocator(n_pages=n_pages, page_size=page_size)
+        self.scheduler = DecodeScheduler(self.alloc, policy=policy,
+                                         max_batch=max_slots)
+        self.cache = M.init_cache(cfg, max_slots, max_seq)
+        self.slots: Dict[int, SlotState] = {}
+        self._pending_kv: Dict[str, object] = {}
+        self._pending_tok: Dict[str, int] = {}
+        self.iterations = 0
+
+        def _decode(params, toks, cache, pos):
+            return M.decode_step(params, cfg, toks, cache, pos)
+        self._decode = jax.jit(_decode)
+
+    # ------------------------------------------------------------------
+    def receive(self, req: Request, kv_cache, first_token: int) -> None:
+        """Receiver module: prefilled KV has arrived (post transfer wait)."""
+        req.phase = Phase.DECODE_QUEUED
+        self._pending_kv[req.rid] = kv_cache
+        self._pending_tok[req.rid] = first_token
+        self.scheduler.enqueue(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for s in range(self.max_slots):
+            if s not in self.slots:
+                return s
+        return None
+
+    def admit(self, now: float) -> List[Request]:
+        admitted = self.scheduler.admit()
+        for req in admitted:
+            slot = self._free_slot()
+            assert slot is not None, "scheduler admitted past slot capacity"
+            kv = self._pending_kv.pop(req.rid)
+            first = self._pending_tok.pop(req.rid)
+            self.cache = M.cache_insert(self.cache, kv, slot)
+            self.slots[slot] = SlotState(req=req, last_token=first,
+                                         tokens=[first])
+            req.phase = Phase.DECODE
+            if req.t_decode_start < 0:
+                req.t_decode_start = now
+        return admitted
+
+    def step(self, now: float) -> List[FinishedRequest]:
+        """One continuous-batching decode iteration over the slot batch."""
+        if not self.slots:
+            return []
+        self.iterations += 1
+        toks = np.zeros((self.max_slots, 1), np.int32)
+        pos = np.zeros((self.max_slots,), np.int32)
+        for s, st in self.slots.items():
+            toks[s, 0] = st.last_token
+            pos[s] = st.req.prompt_len + st.req.generated
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache, jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+
+        finished: List[FinishedRequest] = []
+        for s in list(self.slots):
+            st = self.slots[s]
+            req = st.req
+            self.scheduler.step_token(req.rid)
+            st.last_token = int(nxt[s])
+            st.tokens.append(st.last_token)
+            if (req.generated >= req.decode_len
+                    or req.prompt_len + req.generated >= self.max_seq - 1):
+                req.phase = Phase.FINISHED
+                req.t_finish = now
+                self.scheduler.finish(req.rid)
+                finished.append(FinishedRequest(req=req, tokens=st.tokens))
+                del self.slots[s]
+        return finished
+
+    # ------------------------------------------------------------------
+    def load(self) -> dict:
+        return self.scheduler.load()
+
+    def idle(self) -> bool:
+        return not self.slots and not self.scheduler.queue

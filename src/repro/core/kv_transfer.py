@@ -1,0 +1,105 @@
+"""Unified KV-transfer network stack (paper §3.3.4, Fig. 9, §4).
+
+Physical-link taxonomy and the emulation methodology follow the paper:
+the real deployment would pick Direct (NVLink/ICI ~300 GB/s one-sided),
+Direct-NIC (RoCE 200 Gb/s), or Indirect (socket bounce via host DRAM);
+since this container has no fabric, transfers are *emulated*: payload
+bytes are computed from the model config, and latency = setup + bytes/bw
+(+ an extra host-bounce term for Indirect) — exactly the paper's mock
+mechanism (§4).
+
+On the TPU dry-run path the same handoff lowers as a collective-permute
+across the mesh ``pod`` axis (core/disagg.py) — the ICI analogue of a
+one-sided put.
+
+Granularity: request-level (paper's implementation) or chunk-level
+(paper's future work — free here because chunked prefill yields
+page-aligned chunks; overlaps transfer with remaining chunks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from repro.models.config import ModelConfig
+
+
+class LinkType(enum.Enum):
+    DIRECT = "direct"            # NVLink/HCCS/ICI class
+    DIRECT_NIC = "direct_nic"    # GPU/NPU-direct RDMA NIC
+    INDIRECT = "indirect"        # bounce via host DRAM + sockets
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    link: LinkType
+    bandwidth_Bps: float          # payload bandwidth, bytes/s
+    setup_s: float                # per-transfer fixed cost
+    one_sided: bool               # receiver CPU not involved
+    host_bounce_Bps: float = 0.0  # extra copy bw for INDIRECT
+
+
+# The paper's two emulated setups (§5.1) + the socket fallback (§4)
+TS_NVLINK = LinkSpec(LinkType.DIRECT, 300e9, 10e-6, True)
+TS_ROCE = LinkSpec(LinkType.DIRECT_NIC, 25e9, 30e-6, True)      # 200 Gbps
+TS_SOCKET = LinkSpec(LinkType.INDIRECT, 12.5e9, 100e-6, False,  # 100 Gbps
+                     host_bounce_Bps=40e9)
+# TPU target: inter-pod DCI / intra-pod ICI per-link
+TS_ICI = LinkSpec(LinkType.DIRECT, 50e9, 5e-6, True)
+
+
+def kv_bytes(cfg: ModelConfig, n_tokens: int, dtype_bytes: int = 2) -> int:
+    """Prefilled-KV payload for n_tokens. MLA ships the compressed latent;
+    recurrent blocks ship O(1) state (counted once, not per token)."""
+    per_tok = cfg.kv_bytes_per_token(dtype_bytes)
+    state_bytes = 0
+    for kind in cfg.layer_kinds:
+        if kind == "rglru":
+            lru = cfg.lru_width or cfg.d_model
+            state_bytes += (lru * 4                    # h (f32)
+                            + (cfg.rglru_conv_width - 1) * lru * dtype_bytes)
+        elif kind == "slstm":
+            state_bytes += 4 * cfg.d_model * 4
+        elif kind == "mlstm":
+            ud = 2 * cfg.d_model
+            dh = ud // cfg.n_heads
+            state_bytes += (cfg.n_heads * dh * dh + cfg.n_heads * dh
+                            + cfg.n_heads) * 4 + 3 * ud * dtype_bytes
+    return per_tok * n_tokens + state_bytes
+
+
+class NetworkStack:
+    """send/receive/read/write abstraction (§3.3.4). In emulation mode it
+    returns the wait the receiver must apply (the paper's mock: metadata
+    moves, payload latency is simulated)."""
+
+    def __init__(self, spec: LinkSpec = TS_NVLINK,
+                 granularity: str = "request"):
+        assert granularity in ("request", "chunk")
+        self.spec = spec
+        self.granularity = granularity
+        self.bytes_sent = 0
+        self.transfers = 0
+
+    def transfer_time(self, payload_bytes: int) -> float:
+        t = self.spec.setup_s + payload_bytes / self.spec.bandwidth_Bps
+        if self.spec.link == LinkType.INDIRECT:
+            # extra host-DRAM bounce copy on both ends (2-sided)
+            t += 2 * payload_bytes / self.spec.host_bounce_Bps
+        return t
+
+    def send_kv(self, cfg: ModelConfig, n_tokens: int,
+                n_chunks: int = 1) -> float:
+        """Returns emulated completion delay (s) for a prefilled KV.
+
+        chunk-level granularity pays setup per chunk but overlaps with
+        prefill of later chunks: only the LAST chunk's latency lands on
+        the critical path."""
+        total = kv_bytes(cfg, n_tokens)
+        self.bytes_sent += total
+        if self.granularity == "chunk" and n_chunks > 1:
+            self.transfers += n_chunks
+            return self.transfer_time(total // n_chunks)
+        self.transfers += 1
+        return self.transfer_time(total)

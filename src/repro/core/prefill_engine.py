@@ -1,0 +1,133 @@
+"""Prefill instance (paper §3.3): local scheduler -> length predictor ->
+chunked-prefill LLM engine -> dispatcher.
+
+Real-execution engine: runs the actual JAX model on CPU (tiny configs in
+tests/examples).  Cluster-scale behaviour is reproduced by the simulator
+(runtime/simulator.py) with the same scheduler/dispatcher objects.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chunking
+from repro.core.kv_transfer import NetworkStack
+from repro.core.sched.dispatcher import Dispatcher
+from repro.core.sched.prefill_scheduler import PrefillScheduler
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.runtime.request import Phase, Request
+
+
+@dataclasses.dataclass
+class PrefilledKV:
+    """What the dispatcher ships to a decode instance."""
+    req: Request
+    cache: object                # batch=1 cache pytree (prompt written)
+    first_token: int             # argmax token from prefill (the 'first token')
+    transfer_delay_s: float      # emulated network wait
+    n_chunks: int = 1
+
+
+class PrefillEngine:
+    def __init__(self, iid: str, cfg: ModelConfig, params,
+                 scheduler: Optional[PrefillScheduler] = None,
+                 dispatcher: Optional[Dispatcher] = None,
+                 network: Optional[NetworkStack] = None,
+                 predictor=None,
+                 chunk_size: int = 64, max_seq: int = 512):
+        self.iid = iid
+        self.cfg = cfg
+        self.params = params
+        self.scheduler = scheduler or PrefillScheduler()
+        self.dispatcher = dispatcher or Dispatcher()
+        self.network = network or NetworkStack()
+        self.predictor = predictor
+        self.chunk_size = chunk_size
+        self.max_seq = max_seq
+        # per-request in-flight prefill state
+        self._caches: Dict[str, object] = {}
+        self._chunk_queue: List[chunking.Chunk] = []
+        self._reqs: Dict[str, Request] = {}
+
+        def _prefill(params, toks, cache, q_offset):
+            return M.prefill(params, cfg, toks, cache, q_offset=q_offset)
+        self._prefill = jax.jit(_prefill, static_argnames=())
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.scheduler.add(req)
+        self._reqs[req.rid] = req
+
+    @property
+    def queued_tokens(self) -> int:
+        return self.scheduler.queued_tokens + sum(
+            c.tokens for c in self._chunk_queue)
+
+    def idle(self) -> bool:
+        return len(self.scheduler) == 0 and not self._chunk_queue
+
+    # ------------------------------------------------------------------
+    def _refill_chunks(self) -> None:
+        batch = self.scheduler.next_batch(self.scheduler.sched_batch)
+        if not batch:
+            return
+        pairs = [(r.rid, r.prompt_len) for r in batch]
+        self._chunk_queue.extend(chunking.partition(pairs, self.chunk_size))
+        for r in batch:
+            self._caches[r.rid] = M.init_cache(self.cfg, 1, self.max_seq)
+            r.phase = Phase.PREFILL
+
+    def step(self, now: float) -> List[PrefilledKV]:
+        """Run ONE fixed-size chunk (the paper's prefill iteration unit).
+        Returns requests whose prefill completed this step."""
+        if not self._chunk_queue:
+            self._refill_chunks()
+        if not self._chunk_queue:
+            return []
+        chunk = self._chunk_queue.pop(0)
+        finished: List[PrefilledKV] = []
+        for seg in chunk.segments:
+            req = self._reqs[seg.rid]
+            if req.t_prefill_start < 0:
+                req.t_prefill_start = now
+            toks = np.zeros((1, seg.length), np.int32)
+            if req.prompt_tokens is not None:
+                toks[0] = req.prompt_tokens[
+                    seg.req_start: seg.req_start + seg.length]
+            logits, cache = self._prefill(
+                self.params, jnp.asarray(toks), self._caches[seg.rid],
+                seg.req_start)
+            self._caches[seg.rid] = cache
+            req.prefilled = seg.req_start + seg.length
+            if req.prefilled >= req.prompt_len:
+                finished.append(self._finish_prefill(req, logits, now))
+        return finished
+
+    def _finish_prefill(self, req: Request, logits, now: float
+                        ) -> PrefilledKV:
+        req.t_first_token = now     # chunked prefill emits the first token
+        if self.predictor is not None:
+            b, lo, hi = self.predictor.predict_range(
+                req.prompt_tokens, req.decode_len)
+            req.predicted_bucket, req.predicted_lo, req.predicted_hi = \
+                b, lo, hi
+        n_chunks = chunking.chunks_for(req.prompt_len, self.chunk_size)
+        delay = self.network.send_kv(self.cfg, req.prompt_len,
+                                     n_chunks=n_chunks)
+        req.phase = Phase.TRANSFER
+        first_tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+        cache = self._caches.pop(req.rid)
+        self._reqs.pop(req.rid)
+        return PrefilledKV(req=req, cache=cache, first_token=first_tok,
+                           transfer_delay_s=delay, n_chunks=n_chunks)
+
+    def select_decode_instance(self, loads, req: Request) -> Optional[str]:
+        return self.dispatcher.select(
+            loads, req.prompt_len, req.predicted_hi,
+            heavy=req.is_heavy_decode())

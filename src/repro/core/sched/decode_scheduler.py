@@ -1,0 +1,122 @@
+"""Decode-instance local scheduler: intra-decode scheduling (§3.4).
+
+Continuous batching admission policies against the paged KV allocator:
+
+* ``greedy``          — vLLM's policy: admit while there is spare memory
+                        *now*; oblivious to working-set growth (can thrash
+                        / trigger swaps later).
+* ``reserve-static``  — admit only if the request's full predicted memory
+                        (prompt + predicted-hi generation) fits free pages.
+* ``reserve-dynamic`` — admit if memory suffices until the *shortest
+                        remaining* running job finishes and releases its
+                        pages: batch growth until then must stay under the
+                        free-page budget.  Proactive, paging-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.kvcache.paged import PagedAllocator
+from repro.runtime.request import Request
+
+POLICIES = ("greedy", "reserve-static", "reserve-dynamic")
+
+
+@dataclasses.dataclass
+class RunningInfo:
+    req: Request
+    # pages currently held is tracked by the allocator; remaining below
+    # is predicted remaining decode tokens (scheduler never sees truth)
+    def predicted_remaining(self) -> int:
+        hi = self.req.predicted_hi or self.req.decode_len
+        return max(1, hi - self.req.generated)
+
+
+class DecodeScheduler:
+    def __init__(self, allocator: PagedAllocator,
+                 policy: str = "reserve-dynamic", max_batch: int = 64):
+        assert policy in POLICIES, policy
+        self.alloc = allocator
+        self.policy = policy
+        self.max_batch = max_batch
+        self.queue: List[Request] = []
+        self.running: Dict[str, RunningInfo] = {}
+
+    # ------------------------------------------------------------------
+    def enqueue(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _pages_for_tokens(self, tokens: int) -> int:
+        return self.alloc.pages_for(max(1, tokens))
+
+    def _admissible(self, req: Request) -> bool:
+        """Policy decision. The request's prefilled KV (prompt_len tokens)
+        must be materialized on admission; generation grows it."""
+        now_pages = self._pages_for_tokens(req.prompt_len + 1)
+        hi = req.predicted_hi or req.decode_len
+        if self.policy == "greedy":
+            return self.alloc.free_pages >= now_pages
+        if self.policy == "reserve-static":
+            # free pages must cover this request's full predicted usage
+            # PLUS the outstanding (reserved but not yet allocated) growth
+            # of every running request — a reservation is a commitment.
+            total = self._pages_for_tokens(req.prompt_len + hi)
+            committed = 0
+            for rid, ri in self.running.items():
+                r_hi = ri.req.predicted_hi or ri.req.decode_len
+                full = self._pages_for_tokens(ri.req.prompt_len + r_hi)
+                held = len(self.alloc.table(rid))
+                committed += max(0, full - held)
+            return self.alloc.free_pages >= total + committed
+        # reserve-dynamic
+        if not self.running:
+            return self.alloc.free_pages >= now_pages
+        shortest = min(ri.predicted_remaining()
+                       for ri in self.running.values())
+        # batch page growth until the shortest job completes
+        growth = sum(
+            self._pages_for_tokens(min(ri.predicted_remaining(), shortest))
+            - self._pages_for_tokens(0)
+            for ri in self.running.values())
+        growth += self._pages_for_tokens(
+            req.prompt_len + min(hi, shortest)) - 0
+        return self.alloc.free_pages >= growth
+
+    def admit(self) -> List[Request]:
+        """Admit queued requests into the running batch per policy.
+        Returns newly admitted requests (caller materializes their KV)."""
+        admitted: List[Request] = []
+        remaining: List[Request] = []
+        for req in self.queue:
+            if (len(self.running) + len(admitted) < self.max_batch
+                    and self._admissible(req)
+                    and self.alloc.can_admit(req.prompt_len + 1)):
+                self.alloc.alloc(req.rid, req.prompt_len)
+                self.running[req.rid] = RunningInfo(req)
+                admitted.append(req)
+            else:
+                remaining.append(req)
+        self.queue = remaining
+        return admitted
+
+    def step_token(self, rid: str) -> None:
+        """Account one generated token for a running request."""
+        self.alloc.append_token(rid)
+        self.running[rid].req.generated += 1
+
+    def finish(self, rid: str) -> None:
+        self.alloc.free(rid)
+        del self.running[rid]
+
+    # -- load snapshot for the cluster monitor --------------------------
+    def load(self, heavy_thresh: int = 128) -> dict:
+        heavy = sum(1 for ri in self.running.values()
+                    if ri.req.is_heavy_decode(heavy_thresh))
+        return {
+            "free_pages": self.alloc.free_pages,
+            "n_heavy": heavy,
+            "n_light": len(self.running) - heavy,
+            "queued": len(self.queue),
+            "batch": len(self.running),
+        }

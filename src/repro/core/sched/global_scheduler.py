@@ -1,0 +1,81 @@
+"""Centralized control plane: global scheduler + cluster monitor (§3.2)
+and instance flip (§3.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.core.sched.dispatcher import DecodeLoad
+from repro.runtime.request import Phase, Request
+
+FLIP_LATENCY_S = 0.006   # 5-7 ms measured in the paper (§3.5)
+
+
+@dataclasses.dataclass
+class StatusEntry:
+    req: Request
+    prefill_iid: Optional[str] = None
+    decode_iid: Optional[str] = None
+
+
+class GlobalScheduler:
+    """Forwards arriving requests to the least-loaded prefill instance and
+    tracks request status; decode-instance choice is delegated to the
+    prefill-side dispatcher (disaggregation principle, §3.2)."""
+
+    def __init__(self):
+        self.table: Dict[str, StatusEntry] = {}
+
+    def route(self, req: Request, prefill_loads: Dict[str, int]) -> str:
+        """prefill_loads: iid -> queued tokens. Returns chosen iid."""
+        iid = min(prefill_loads, key=lambda k: prefill_loads[k])
+        self.table[req.rid] = StatusEntry(req=req, prefill_iid=iid)
+        return iid
+
+    def note_dispatch(self, rid: str, decode_iid: str) -> None:
+        self.table[rid].decode_iid = decode_iid
+
+    def finished(self) -> List[Request]:
+        return [e.req for e in self.table.values()
+                if e.req.phase == Phase.FINISHED]
+
+
+class ClusterMonitor:
+    """Collects instance load stats and broadcasts decode loads to all
+    prefill instances (every ``interval``); owns instance lifecycle and
+    the flip transition-watcher (§3.5)."""
+
+    def __init__(self, interval_s: float = 0.1,
+                 flip_idle_s: float = 60.0):
+        self.interval_s = interval_s
+        self.flip_idle_s = flip_idle_s
+        self.decode_loads: Dict[str, DecodeLoad] = {}
+        self.prefill_loads: Dict[str, int] = {}
+        self._idle_since: Dict[str, float] = {}
+
+    def report_decode(self, iid: str, load: dict, now: float) -> None:
+        self.decode_loads[iid] = DecodeLoad(
+            iid=iid, free_pages=load["free_pages"], n_heavy=load["n_heavy"],
+            n_light=load["n_light"], queued=load["queued"])
+        if load["batch"] == 0 and load["queued"] == 0:
+            self._idle_since.setdefault(iid, now)
+        else:
+            self._idle_since.pop(iid, None)
+
+    def report_prefill(self, iid: str, queued_tokens: int,
+                       now: float) -> None:
+        self.prefill_loads[iid] = queued_tokens
+        if queued_tokens == 0:
+            self._idle_since.setdefault(iid, now)
+        else:
+            self._idle_since.pop(iid, None)
+
+    def broadcast(self) -> Dict[str, DecodeLoad]:
+        """What every prefill instance's dispatcher sees."""
+        return dict(self.decode_loads)
+
+    def flip_candidates(self, now: float) -> List[str]:
+        """Instances idle past the threshold — transition watcher policy."""
+        return [iid for iid, t0 in self._idle_since.items()
+                if now - t0 >= self.flip_idle_s]

@@ -1,0 +1,63 @@
+"""Prefill-instance local scheduler (paper §3.3.1).
+
+Policies: FCFS / SJF / LJF over a ``PrefillSchedBatch`` window — sorting
+happens within a bounded batch of requests at a time, which prevents
+starvation of long (SJF) or short (LJF) prompts.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.runtime.request import Request
+
+POLICIES = ("fcfs", "sjf", "ljf")
+DEFAULT_SCHED_BATCH = 16     # paper's default (§5.1)
+
+
+class PrefillScheduler:
+    def __init__(self, policy: str = "sjf",
+                 sched_batch: int = DEFAULT_SCHED_BATCH):
+        assert policy in POLICIES, policy
+        self.policy = policy
+        self.sched_batch = sched_batch
+        self.raw: Deque[Request] = deque()
+        self.scheduled: Deque[Request] = deque()
+
+    def add(self, req: Request) -> None:
+        self.raw.append(req)
+
+    def __len__(self) -> int:
+        return len(self.raw) + len(self.scheduled)
+
+    @property
+    def queued_tokens(self) -> int:
+        return sum(r.prompt_len - r.prefilled
+                   for r in list(self.raw) + list(self.scheduled))
+
+    def _schedule_window(self) -> None:
+        """Move up to sched_batch requests raw -> scheduled, sorted by
+        policy.  The window bound is the anti-starvation mechanism."""
+        window: List[Request] = []
+        while self.raw and len(window) < self.sched_batch:
+            window.append(self.raw.popleft())
+        if self.policy == "sjf":
+            window.sort(key=lambda r: r.prompt_len)
+        elif self.policy == "ljf":
+            window.sort(key=lambda r: -r.prompt_len)
+        # fcfs: keep arrival order
+        self.scheduled.extend(window)
+
+    def next_batch(self, max_requests: int) -> List[Request]:
+        """Pop up to max_requests scheduled requests for chunking."""
+        if not self.scheduled:
+            self._schedule_window()
+        out: List[Request] = []
+        while self.scheduled and len(out) < max_requests:
+            out.append(self.scheduled.popleft())
+        return out
+
+    def peek_all(self) -> List[Request]:
+        if not self.scheduled:
+            self._schedule_window()
+        return list(self.scheduled)

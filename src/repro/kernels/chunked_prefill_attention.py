@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: chunked-prefill flash attention.
+
+The paper's pillar 1 (§3.3.3): prefill runs in fixed-size chunks so the
+accelerator sits at its compute-saturation point.  The hot op is the
+chunk's attention against the already-written KV prefix plus itself.
+
+TPU adaptation (DESIGN.md §3): instead of a CUDA fused MHA over a ragged
+batch, we tile (q-block x kv-block) over the MXU with explicit VMEM
+BlockSpecs and an online-softmax accumulator held in VMEM scratch.
+Block sizes default to 128/512 — MXU-aligned (128 lanes) and sized so the
+working set (q blk + k blk + v blk + acc) stays well under ~16 MB VMEM.
+
+Grid: (batch, heads, q_blocks, kv_blocks); kv innermost so the scratch
+accumulator carries across kv blocks of one (b, h, q) tile.
+Scalar-prefetch operands: kv_len (b,) valid cache length per request and
+q_offset (1,) absolute position of the chunk start.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 512
+
+
+def _kernel(kv_len_ref, q_off_ref,          # scalar prefetch
+            q_ref, k_ref, v_ref,            # VMEM blocks
+            o_ref,                          # VMEM out block
+            m_ref, l_ref, acc_ref,          # VMEM scratch
+            *, block_q: int, block_kv: int, n_kv_blocks: int,
+            window: int, causal: bool):
+    bi = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kv_len_ref[bi]
+    q_off = q_off_ref[0]
+    q_pos = q_off + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+
+    # skip fully-masked kv blocks (beyond kv_len, or entirely a-causal)
+    blk_k_min = ki * block_kv
+    blk_q_max = q_off + (qi + 1) * block_q - 1
+    live = blk_k_min < kv_len
+    if causal:
+        live = jnp.logical_and(live, blk_k_min <= blk_q_max)
+
+    @pl.when(live)
+    def _update():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)      # (bk, hd_v)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * (q.shape[-1] ** -0.5)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "causal", "block_q", "block_kv", "interpret"))
+def chunked_prefill_attention(
+        q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+        kv_len: jnp.ndarray, q_offset: jnp.ndarray, *,
+        window: int = 0, causal: bool = True,
+        block_q: int = DEFAULT_BLOCK_Q, block_kv: int = DEFAULT_BLOCK_KV,
+        interpret: bool = False) -> jnp.ndarray:
+    """q: (b, sq, h, hd); k_cache/v_cache: (b, skv, kvh, hd) with the chunk
+    already appended at [q_offset, q_offset+sq); kv_len: (b,) valid length
+    after append; q_offset: (1,) chunk start.  Returns (b, sq, h, hd_v)."""
+    b, sq, h, hd = q.shape
+    _, skv, kvh, hd_v = v_cache.shape
+    rep = h // kvh
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv)
+    nq, nk = sq // block_q, skv // block_kv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda bi, hi, qi, ki, *_: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd),
+                         lambda bi, hi, qi, ki, *_: (bi, ki, hi // rep, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd_v),
+                         lambda bi, hi, qi, ki, *_: (bi, ki, hi // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd_v),
+                               lambda bi, hi, qi, ki, *_: (bi, qi, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd_v), jnp.float32),
+        ])
+    kern = functools.partial(
+        _kernel, block_q=block_q, block_kv=block_kv, n_kv_blocks=nk,
+        window=window, causal=causal)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, hd_v), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q_offset.astype(jnp.int32),
+      q, k_cache, v_cache)

@@ -1,0 +1,39 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode;
+on a real TPU backend they compile to Mosaic.  The engines call these —
+never ``pallas_call`` directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
+from repro.kernels.paged_decode_attention import paged_decode_attention
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def prefill_attention(q, k_cache, v_cache, kv_len, q_offset, *,
+                      window: int = 0, causal: bool = True,
+                      block_q: int = 0, block_kv: int = 0):
+    kwargs = {}
+    if block_q:
+        kwargs["block_q"] = block_q
+    if block_kv:
+        kwargs["block_kv"] = block_kv
+    return chunked_prefill_attention(
+        q, k_cache, v_cache, jnp.asarray(kv_len), jnp.asarray(q_offset),
+        window=window, causal=causal, interpret=_interpret(), **kwargs)
+
+
+def decode_attention(q, k_pool, v_pool, block_table, lens):
+    return paged_decode_attention(
+        q, k_pool, v_pool, block_table, jnp.asarray(lens),
+        interpret=_interpret())

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_chunked_prefill_attention(q, k_cache, v_cache, kv_len, q_offset, *,
+                                  window: int = 0, causal: bool = True):
+    """Oracle for kernels.chunked_prefill_attention (naive softmax)."""
+    b, sq, h, hd = q.shape
+    _, skv, kvh, hd_v = v_cache.shape
+    rep = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, sq, kvh, rep, hd)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qf, kf) * hd ** -0.5
+    q_pos = q_offset[0] + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = k_pos[None, None, :] < kv_len[:, None, None]     # (b,1,skv)
+    if causal:
+        mask = mask & (q_pos[None, :, None] >= k_pos[None, None, :])
+    if window:
+        mask = mask & (k_pos[None, None, :] > q_pos[None, :, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, vf)
+    return out.reshape(b, sq, h, hd_v).astype(q.dtype)
+
+
+def ref_paged_decode_attention(q, k_pool, v_pool, block_table, lens):
+    """Oracle for kernels.paged_decode_attention: gather pages densely,
+    then masked single-token attention."""
+    b, h, hd = q.shape
+    n_pages, page, kvh, hd_v = v_pool.shape
+    n_slots = block_table.shape[1]
+    rep = h // kvh
+    k = k_pool[block_table].reshape(b, n_slots * page, kvh, hd)
+    v = v_pool[block_table].reshape(b, n_slots * page, kvh, hd_v)
+    qf = q.astype(jnp.float32).reshape(b, kvh, rep, hd)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qf, k.astype(jnp.float32)) * hd ** -0.5
+    tok = jnp.arange(n_slots * page)
+    s = jnp.where(tok[None, None, None, :] < lens[:, None, None, None],
+                  s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd_v).astype(q.dtype)

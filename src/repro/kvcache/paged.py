@@ -1,0 +1,132 @@
+"""Paged KV cache: block-table allocator + device page pool.
+
+Two layers, mirroring vLLM's split (§2.1, [21]):
+
+* ``PagedAllocator`` — host-side bookkeeping: free-list, per-request page
+  lists, watermark/swap accounting.  The decode-instance schedulers
+  (greedy / reserve-static / reserve-dynamic, §3.4) make admission
+  decisions against this, and the cluster monitor broadcasts its load.
+* ``PagePool`` — the device-side tensors (layers, n_pages, page, kvh, hd)
+  plus jit'd scatter ops used with kernels/paged_decode_attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfPages(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class PagedAllocator:
+    """Free-list page allocator with per-request block tables."""
+    n_pages: int
+    page_size: int
+
+    def __post_init__(self):
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self._tables: Dict[str, List[int]] = {}
+        self._lens: Dict[str, int] = {}
+        self.swap_events = 0
+
+    # -- queries -------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_pages / self.n_pages
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size) if n_tokens > 0 else 0
+
+    def table(self, rid: str) -> List[int]:
+        return list(self._tables[rid])
+
+    def length(self, rid: str) -> int:
+        return self._lens[rid]
+
+    def has(self, rid: str) -> bool:
+        return rid in self._tables
+
+    # -- mutations -----------------------------------------------------
+    def alloc(self, rid: str, n_tokens: int) -> List[int]:
+        """Allocate pages for a new request with n_tokens already present
+        (e.g. a received prefilled KV)."""
+        assert rid not in self._tables, rid
+        need = max(1, self.pages_for(n_tokens))
+        if need > len(self._free):
+            raise OutOfPages(f"{rid}: need {need}, free {len(self._free)}")
+        pages = [self._free.pop() for _ in range(need)]
+        self._tables[rid] = pages
+        self._lens[rid] = n_tokens
+        return list(pages)
+
+    def append_token(self, rid: str) -> int:
+        """Account one decoded token; grows the table when a page fills.
+        Returns the physical page holding the new token."""
+        ln = self._lens[rid]
+        if ln == len(self._tables[rid]) * self.page_size:
+            if not self._free:
+                raise OutOfPages(f"{rid}: decode append")
+            self._tables[rid].append(self._free.pop())
+        self._lens[rid] = ln + 1
+        return self._tables[rid][ln // self.page_size]
+
+    def free(self, rid: str) -> None:
+        self._free.extend(reversed(self._tables.pop(rid)))
+        self._lens.pop(rid)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pages_for(max(1, n_tokens)) <= len(self._free)
+
+
+# ---------------------------------------------------------------------------
+# Device page pool
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PagePool:
+    """Per-layer K/V page pools. k/v: (L, n_pages, page, kvh, hd)."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+    @classmethod
+    def create(cls, n_layers: int, n_pages: int, page_size: int, kvh: int,
+               hd: int, dtype=jnp.bfloat16) -> "PagePool":
+        shape = (n_layers, n_pages, page_size, kvh, hd)
+        return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[2]
+
+    def write_chunk(self, layer: int, pages: np.ndarray, k_chunk, v_chunk
+                    ) -> "PagePool":
+        """Write a page-aligned chunk. pages: (chunk//page,) physical ids;
+        k_chunk/v_chunk: (chunk, kvh, hd)."""
+        ps = self.page_size
+        kc = k_chunk.reshape(-1, ps, *k_chunk.shape[1:]).astype(self.k.dtype)
+        vc = v_chunk.reshape(-1, ps, *v_chunk.shape[1:]).astype(self.v.dtype)
+        pages = jnp.asarray(pages)
+        return PagePool(k=self.k.at[layer, pages].set(kc),
+                        v=self.v.at[layer, pages].set(vc))
+
+    def write_token(self, layer: int, page: int, offset: int, k_tok, v_tok
+                    ) -> "PagePool":
+        """k_tok/v_tok: (kvh, hd)."""
+        return PagePool(
+            k=self.k.at[layer, page, offset].set(k_tok.astype(self.k.dtype)),
+            v=self.v.at[layer, page, offset].set(v_tok.astype(self.v.dtype)))
+
+    def layer(self, layer: int):
+        return self.k[layer], self.v[layer]

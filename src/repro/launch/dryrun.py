@@ -1,0 +1,365 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination with ShapeDtypeStruct inputs (no allocation), print/record
+memory_analysis + cost_analysis + collective bytes for §Roofline.
+
+MUST be the first import side effect: the XLA_FLAGS line above runs
+before jax locks the device count.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, input_specs, resolve_config
+from repro.models import model as M
+from repro.models import sharding as S
+from repro.train import optimizer as opt
+from repro.train import trainer
+
+# TPU v5e constants (assignment)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+CHUNK_SIZE = 512             # chunked-prefill unit (the paper's pillar 1)
+FSDP_SERVE_BYTES = 12e9      # 2D-shard serve weights above this / chip
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind from optimized HLO."""
+    stats = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        kind = m.group(2)
+        b = _tensor_bytes(m.group(1))
+        st = stats.setdefault(kind, {"count": 0, "bytes": 0})
+        st["count"] += 1
+        st["bytes"] += b
+    return stats
+
+
+def collective_link_bytes(stats: dict) -> float:
+    """Per-chip ICI traffic: compiled HLO is the per-device (post-SPMD)
+    program, so parsed tensor bytes are already shard-local.  Ring
+    all-reduce moves ~2x the shard over the link (reduce-scatter +
+    all-gather); the others ~1x."""
+    factor = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+    total = 0.0
+    for kind, st in stats.items():
+        total += factor.get(kind, 1.0) * st["bytes"]
+    return total
+
+
+def build_step(cfg, shape_name, mesh, batch_axes, opts=()):
+    """Returns (fn, example_args, in_shardings, out_shardings)."""
+    kind = SHAPES[shape_name]["kind"]
+    specs = input_specs(cfg, shape_name)
+    params_abs = M.abstract_params(cfg)
+    model_size = mesh.shape.get("model", 1)
+    repl = NamedSharding(mesh, P())
+    # batch must divide the data axes (long_500k has batch=1: replicate)
+    batch = SHAPES[shape_name]["batch"]
+    dsize = 1
+    for ax in batch_axes:
+        dsize *= mesh.shape.get(ax, 1)
+    if batch % dsize != 0:
+        batch_axes = ()
+    data_ns = lambda nd: NamedSharding(
+        mesh, P(tuple(batch_axes) if batch_axes else None,
+                *([None] * nd)))
+
+    if kind == "train":
+        p_sh = S.param_shardings(params_abs, mesh, fsdp=True)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        o_sh = opt.AdamWState(step=repl,
+                              m=S.param_shardings(opt_abs.m, mesh,
+                                                  fsdp=True),
+                              v=S.param_shardings(opt_abs.v, mesh,
+                                                  fsdp=True))
+        has_enc = "enc_embeds" in specs
+        micro = 1
+        for o in opts:
+            if o.startswith("mb"):
+                micro = int(o[2:])
+        step = trainer.make_train_step(cfg, has_encoder=has_enc,
+                                       microbatch=micro)
+        args = [params_abs, opt_abs, specs["tokens"], specs["labels"]]
+        in_sh = [p_sh, o_sh, data_ns(1), data_ns(1)]
+        if has_enc:
+            args.append(specs["enc_embeds"])
+            in_sh.append(data_ns(2))
+        out_sh = (p_sh, o_sh, repl)
+        return step, args, tuple(in_sh), out_sh, batch_axes
+
+    # serving: replicate weights over data unless they would not fit;
+    # over-budget models use 2D *tensor* parallelism (expert dim x ff dim)
+    # so chunked prefill never re-gathers weights per chunk (§Perf)
+    per_chip = sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(params_abs)) \
+        / model_size
+    big = per_chip > FSDP_SERVE_BYTES
+    p_sh = S.param_shardings(params_abs, mesh, serve2d=big)
+    c_sh = S.cache_shardings(specs["cache"], mesh, batch_axes=batch_axes)
+
+    if kind == "prefill":
+        has_enc = "enc_embeds" in specs
+        if has_enc:
+            def step(params, tokens, cache, enc):
+                return M.prefill_chunked(params, cfg, tokens, cache,
+                                         chunk_size=CHUNK_SIZE,
+                                         enc_embeds=enc)
+            args = [params_abs, specs["tokens"], specs["cache"],
+                    specs["enc_embeds"]]
+            in_sh = [p_sh, data_ns(1), c_sh, data_ns(2)]
+        else:
+            def step(params, tokens, cache):
+                return M.prefill_chunked(params, cfg, tokens, cache,
+                                         chunk_size=CHUNK_SIZE)
+            args = [params_abs, specs["tokens"], specs["cache"]]
+            in_sh = [p_sh, data_ns(1), c_sh]
+        out_sh = (data_ns(2), c_sh)
+        return step, args, tuple(in_sh), out_sh, batch_axes
+
+    # decode
+    def step(params, tokens, cache, pos):
+        return M.decode_step(params, cfg, tokens, cache, pos)
+    args = [params_abs, specs["tokens"], specs["cache"], specs["pos"]]
+    in_sh = [p_sh, data_ns(1), c_sh, data_ns(0)]
+    out_sh = (data_ns(2), c_sh)
+    return step, args, tuple(in_sh), out_sh, batch_axes
+
+
+def model_flops(cfg, shape_name) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (inference)."""
+    n_active = M.active_param_count(cfg)
+    shape = SHAPES[shape_name]
+    kind = shape["kind"]
+    tokens = shape["batch"] * (shape["seq"] if kind in ("train", "prefill")
+                               else 1)
+    return (6.0 if kind == "train" else 2.0) * n_active * tokens
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            verbose: bool = True, opts=()) -> dict:
+    cfg = get_config(arch)
+    cfg = resolve_config(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "opts": sorted(opts),
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if cfg is None:
+        rec["status"] = "skipped"
+        rec["reason"] = "full-attention arch at 500k ctx (DESIGN.md §4)"
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    t0 = time.time()
+    step, args, in_sh, out_sh, batch_axes = build_step(
+        cfg, shape_name, mesh, batch_axes, opts=opts)
+
+    def step_constrained(*a):
+        with S.activation_sharding(mesh, batch_axes=batch_axes, opts=opts):
+            return step(*a)
+
+    with mesh:
+        jitted = jax.jit(step_constrained, in_shardings=in_sh,
+                         out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes":
+                int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:   # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    # XLA's cost_analysis counts while bodies once; use the trip-count
+    # weighted static analyzer (launch/hlo_cost.py) as the primary source.
+    hlo_text = compiled.as_text()
+    summary = hlo_cost.analyze(hlo_text)
+    flops = summary.flops
+    bytes_acc = summary.hbm_bytes
+    stats = {k: {"count": int(summary.collective_counts[k]),
+                 "bytes": int(v)}
+             for k, v in summary.collective_bytes.items()}
+    link_bytes = summary.link_bytes()
+    rec["xla_cost_analysis"] = {
+        "flops_unweighted": float(cost.get("flops", 0.0)),
+        "bytes_unweighted": float(cost.get("bytes accessed", 0.0)),
+    }
+    rec["unknown_trip_loops"] = summary.unknown_trip_loops
+
+    mf = model_flops(cfg, shape_name)
+    compute_t = flops / PEAK_FLOPS
+    # memory term: per-device resident traffic (weights+cache+IO read,
+    # peak temporaries written+read once) — the TPU fusion-aware proxy.
+    # The parsed kernel-boundary bytes (CPU HLO, little fusion) are kept
+    # as a pessimistic diagnostic in hbm_bytes_kernel_est.
+    mem_info = rec.get("memory", {})
+    resident = (mem_info.get("argument_bytes", 0)
+                + mem_info.get("output_bytes", 0)
+                + mem_info.get("temp_bytes", 0))
+    memory_t = resident / HBM_BW
+    coll_t = link_bytes / LINK_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    rec.update({
+        "status": "ok",
+        "chips": chips,
+        "hlo_flops_per_chip": flops,
+        "hbm_resident_bytes_per_chip": resident,
+        "hbm_bytes_kernel_est": bytes_acc,
+        "collectives": stats,
+        "collective_link_bytes_per_chip": link_bytes,
+        "roofline": terms,
+        "bottleneck": max(terms, key=terms.get).replace("_s", ""),
+        "model_flops": mf,
+        "useful_flops_ratio": mf / (flops * chips) if flops else 0.0,
+    })
+    if verbose:
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] compile "
+              f"{rec['compile_s']}s  flops={flops:.3e} bytes={bytes_acc:.3e}"
+              f" link={link_bytes:.3e}  bottleneck={rec['bottleneck']}")
+        print(f"  memory_analysis: {rec['memory']}")
+        print(f"  roofline: compute={compute_t*1e3:.2f}ms "
+              f"memory={memory_t*1e3:.2f}ms collective={coll_t*1e3:.2f}ms "
+              f"useful-flops={rec['useful_flops_ratio']:.2f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--opt", default="",
+                    help="comma list: seqkv,attn2d,seqact (see EXPERIMENTS"
+                         ".md §Perf)")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opt.split(",") if o)
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ASSIGNED_ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch.replace('-', '_')}__{shape}__" \
+                      f"{'2x16x16' if mp else '16x16'}"
+                if opts:
+                    tag += "__" + "_".join(sorted(opts))
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                try:
+                    rec = run_one(arch, shape, mp, opts=opts)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": str(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures.append(tag)
+                    print(f"[FAIL] {tag}: {e}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+    if failures:
+        print(f"{len(failures)} failures: {failures}")
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()
+
+
+def run_disagg(arch: str = "qwen2_0_5b", verbose: bool = True) -> dict:
+    """Lower + compile the disaggregated prefill->handoff->decode step on
+    the multi-pod mesh: proves the pod0 -> pod1 KV collective-permute
+    (the paper's KV transfer, mapped to ICI/DCI) schedules."""
+    from repro.core.disagg import make_disagg_step
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=True)
+    b, s_len = 16, 4096                      # a prefill wave
+    step = make_disagg_step(cfg, mesh, chunk_size=CHUNK_SIZE,
+                            batch_axes=("data",))
+    params_abs = M.abstract_params(cfg)
+    p_sh = S.param_shardings(params_abs, mesh)
+    cache_abs = M.abstract_cache(cfg, b, s_len + 8)
+    c_sh = S.cache_shardings(cache_abs, mesh, batch_axes=("data",))
+    tokens = jax.ShapeDtypeStruct((b, s_len), jnp.int32)
+    t_sh = NamedSharding(mesh, P("data"))
+
+    def stepc(params, toks, cache):
+        with S.activation_sharding(mesh, batch_axes=("data",)):
+            return step(params, toks, cache)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(stepc, in_shardings=(p_sh, t_sh, c_sh),
+                          out_shardings=(t_sh, t_sh, c_sh)).lower(
+            params_abs, tokens, cache_abs)
+        compiled = lowered.compile()
+    stats = collective_stats(compiled.as_text())
+    rec = {"arch": arch, "mode": "disagg_step", "mesh": "2x16x16",
+           "status": "ok", "compile_s": round(time.time() - t0, 1),
+           "collectives": stats}
+    if verbose:
+        print(f"[disagg_step {arch} x 2x16x16] compile {rec['compile_s']}s")
+        print(f"  collective-permute count: "
+              f"{stats.get('collective-permute', {}).get('count', 0)} "
+              f"(the pod0->pod1 KV handoff)")
+        print(f"  all kinds: { {k: v['count'] for k, v in stats.items()} }")
+    return rec

@@ -1,0 +1,284 @@
+"""Static roofline accounting over optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+under-counts every ``lax.scan`` (layer stacks, chunked prefill, flash
+blocks, recurrent time scans) by its trip count.  This module parses the
+per-device HLO, builds the computation call graph (while bodies weighted
+by ``known_trip_count``, fusions/calls inlined), and accumulates:
+
+  * flops            — 2*M*N*K for every ``dot`` (+ rough conv term)
+  * hbm bytes        — operands+outputs of top-level (kernel-boundary)
+                       instructions; fusion internals are VMEM-resident
+  * collective bytes — per kind, for the collective roofline term
+
+All numbers are per-device (the compiled module is the SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2, "c64": 8,
+                "s4": 1, "u4": 1, "tuple": 0, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?))\s*([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[":{ ]+n["\s:]+\"?(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+
+ZERO_COST = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             "reshape"}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]          # instr name -> type str
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1), [], {})
+            continue
+        if stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), stripped)
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.type_str
+    return comps
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    # output elements x 2 x contracted size (batch dims included in output)
+    out_elems = 0
+    for dt, dims in shape_dims(ins.type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        out_elems += n
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    ops = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
+    k = 1
+    if m and ops:
+        lhs_type = comp.shapes.get(ops[0], "")
+        dims = shape_dims(lhs_type)
+        if dims:
+            lhs_dims = dims[0][1]
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(lhs_dims):
+                    k *= lhs_dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    body = ins.line.split("(", 1)[1]
+    # cut attributes after the closing paren of the operand list
+    depth, end = 1, len(body)
+    for i, ch in enumerate(body):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    total = 0
+    for op_name in _OPERAND_RE.findall(body[:end]):
+        t = comp.shapes.get(op_name)
+        if t:
+            total += tensor_bytes(t)
+    return total
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    unknown_trip_loops: int = 0
+
+    def link_bytes(self) -> float:
+        factor = {"all-reduce": 2.0, "all-gather": 1.0,
+                  "reduce-scatter": 1.0, "all-to-all": 1.0,
+                  "collective-permute": 1.0}
+        return sum(factor.get(k, 1.0) * v
+                   for k, v in self.collective_bytes.items())
+
+
+def analyze(hlo: str) -> CostSummary:
+    comps = parse_module(hlo)
+    summary = CostSummary()
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the computation with most instructions
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+
+    visiting = set()
+
+    memo: Dict[Tuple[str, bool], Tuple[float, float, dict, dict, int]] = {}
+
+    def walk(cname: str, top_level: bool) -> Tuple[float, float, dict,
+                                                   dict, int]:
+        """Returns (flops, bytes, coll_bytes, coll_counts, unknown)."""
+        key = (cname, top_level)
+        if key in memo:
+            return memo[key]
+        if cname in visiting or cname not in comps:
+            return (0.0, 0.0, {}, {}, 0)
+        visiting.add(cname)
+        comp = comps[cname]
+        fl, by = 0.0, 0.0
+        cb: dict = defaultdict(float)
+        cc: dict = defaultdict(float)
+        unk = 0
+        for ins in comp.instrs:
+            base_op = ins.op
+            if base_op.endswith("-start"):
+                base_op = base_op[:-6]
+            if base_op in ZERO_COST:
+                continue
+            if base_op == "fusion":
+                # kernel boundary: HBM traffic = operands + outputs;
+                # flops from dots inside the fused computation
+                by += tensor_bytes(ins.type_str) + _operand_bytes(ins, comp)
+                m = _CALLS_RE.search(ins.line)
+                if m:
+                    f2, _, cb2, cc2, u2 = walk(m.group(1), False)
+                    fl += f2
+                    unk += u2
+                    for k, v in cb2.items():
+                        cb[k] += v
+                    for k, v in cc2.items():
+                        cc[k] += v
+                continue
+            if base_op == "while":
+                trip = 1
+                mt = _TRIP_RE.search(ins.line)
+                if mt:
+                    trip = int(mt.group(1))
+                else:
+                    unk += 1
+                names = _CALLS_RE.findall(ins.line)
+                for sub in names:
+                    f2, b2, cb2, cc2, u2 = walk(sub, top_level)
+                    fl += trip * f2
+                    by += trip * b2
+                    unk += u2
+                    for k, v in cb2.items():
+                        cb[k] += trip * v
+                    for k, v in cc2.items():
+                        cc[k] += trip * v
+                continue
+            if base_op in ("call", "conditional", "async-start"):
+                for sub in _CALLS_RE.findall(ins.line):
+                    f2, b2, cb2, cc2, u2 = walk(sub, top_level)
+                    fl += f2
+                    by += b2
+                    unk += u2
+                    for k, v in cb2.items():
+                        cb[k] += v
+                    for k, v in cc2.items():
+                        cc[k] += v
+                continue
+            if base_op in COLLECTIVES:
+                b = tensor_bytes(ins.type_str)
+                cb[base_op] += b
+                cc[base_op] += 1
+                by += b if top_level else 0
+                continue
+            if base_op == "dot":
+                fl += _dot_flops(ins, comp)
+                if top_level:
+                    by += tensor_bytes(ins.type_str) \
+                        + _operand_bytes(ins, comp)
+                continue
+            if base_op == "convolution":
+                # rough: 2 * out_elems * prod(kernel spatial) * in_ch
+                fl += 2.0 * tensor_bytes(ins.type_str)
+                if top_level:
+                    by += tensor_bytes(ins.type_str) \
+                        + _operand_bytes(ins, comp)
+                continue
+            # in-place slice updates touch only the slice region, not the
+            # whole buffer (the big operand is aliased)
+            if base_op == "dynamic-update-slice":
+                if top_level:
+                    ops = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
+                    upd = comp.shapes.get(ops[1], "") if len(ops) > 1 else ""
+                    by += 2 * tensor_bytes(upd)
+                continue
+            if base_op in ("dynamic-slice", "gather"):
+                if top_level:
+                    by += 2 * tensor_bytes(ins.type_str)
+                continue
+            # elementwise / reduce / copy etc.
+            if top_level:
+                by += tensor_bytes(ins.type_str) + _operand_bytes(ins, comp)
+        visiting.discard(cname)
+        out = (fl, by, dict(cb), dict(cc), unk)
+        memo[key] = out
+        return out
+
+    fl, by, cb, cc, unk = walk(entry, True)
+    summary.flops = fl
+    summary.hbm_bytes = by
+    summary.collective_bytes = defaultdict(float, cb)
+    summary.collective_counts = defaultdict(float, cc)
+    summary.unknown_trip_loops = unk
+    return summary

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state.  The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import; smoke tests and benchmarks see the 1 real device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+    either extra batch parallelism (train/serve) or the prefill/decode
+    disaggregation axis (core/disagg.py)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have "
+            f"{len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over whatever devices exist (tests)."""
+    devices = jax.devices()[: data * model]
+    return jax.make_mesh((data, model), ("data", "model"), devices=devices)

@@ -1,0 +1,61 @@
+"""Serving launcher: run the disaggregated cluster (simulator at paper
+scale, or real engines for small models).
+
+  PYTHONPATH=src python -m repro.launch.serve --workload Mixed --requests 128
+  PYTHONPATH=src python -m repro.launch.serve --real   # tiny model, CPU
+"""
+import argparse
+import copy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="Mixed",
+                    choices=["LPLD", "LPHD", "HPLD", "HPHD", "Mixed"])
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--arch", default="opt_13b")
+    ap.add_argument("--prefill-policy", default="sjf",
+                    choices=["fcfs", "sjf", "ljf"])
+    ap.add_argument("--decode-policy", default="reserve-dynamic",
+                    choices=["greedy", "reserve-static", "reserve-dynamic"])
+    ap.add_argument("--dispatch", default="power2",
+                    choices=["power2", "random", "imbalance"])
+    ap.add_argument("--n-prefill", type=int, default=1)
+    ap.add_argument("--n-decode", type=int, default=1)
+    ap.add_argument("--flip", action="store_true", default=True)
+    ap.add_argument("--real", action="store_true",
+                    help="run the real engines on a tiny model (CPU)")
+    args = ap.parse_args()
+
+    if args.real:
+        from examples import quickstart  # noqa — same flow
+        import runpy
+        runpy.run_path("examples/quickstart.py", run_name="__main__")
+        return
+
+    from repro.configs import get_config
+    from repro.runtime.costmodel import CostModel, HardwareSpec
+    from repro.runtime.simulator import DisaggSimulator
+    from repro.runtime.workload import generate
+
+    cfg = get_config(args.arch)
+    cost = CostModel(cfg, HardwareSpec.v100_tp2())
+    reqs = generate(args.workload, args.requests, seed=0)
+    r = DisaggSimulator(
+        cfg, cost, n_prefill=args.n_prefill, n_decode=args.n_decode,
+        prefill_policy=args.prefill_policy,
+        decode_policy=args.decode_policy, dispatch_policy=args.dispatch,
+        max_batch=64, enable_flip=args.flip, flip_idle_s=1.0,
+    ).run(copy.deepcopy(reqs))
+    m = r.metrics
+    print(f"workload={args.workload} n={m['n']}")
+    print(f"avg TTFT {m['avg_ttft']:.3f}s  p90 {m['p90_ttft']:.3f}s")
+    print(f"avg JCT  {m['avg_jct']:.3f}s  p90 {m['p90_jct']:.3f}s")
+    print(f"resource time {r.resource_time:.1f}s "
+          f"(prefill {r.prefill_busy:.1f} decode {r.decode_busy:.1f})  "
+          f"perf/$ {r.perf_per_dollar:.3f} req/inst-s  flips={r.flips} "
+          f"swaps={r.swap_events}")
+
+
+if __name__ == "__main__":
+    main()

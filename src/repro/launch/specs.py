@@ -1,0 +1,68 @@
+"""Assigned input shapes + ShapeDtypeStruct input specs per (arch, shape).
+
+Decode shapes lower ``serve_step`` (one token vs a seq_len KV cache),
+never ``train_step``.  ``long_500k`` requires sub-quadratic attention:
+native for the hybrid/SSM archs; dense/MoE/VLM archs get the
+sliding-window variant (window 4096, ring cache); whisper is skipped
+(448-token decoder context — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import frontends as F
+from repro.models import model as M
+from repro.models.config import ATTN, CROSS_ATTN, ModelConfig
+
+SLIDING_WINDOW_500K = 4096
+
+SHAPES: Dict[str, dict] = {
+    "train_4k":    {"kind": "train",   "seq": 4_096,   "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32_768,  "batch": 32},
+    "decode_32k":  {"kind": "decode",  "seq": 32_768,  "batch": 128},
+    "long_500k":   {"kind": "decode",  "seq": 524_288, "batch": 1,
+                    "needs_subquadratic": True},
+}
+
+
+def resolve_config(cfg: ModelConfig, shape_name: str
+                   ) -> Optional[ModelConfig]:
+    """Shape-specific config adjustments; None => skip (documented)."""
+    shape = SHAPES[shape_name]
+    if shape.get("needs_subquadratic") and not cfg.subquadratic:
+        if cfg.n_positions and shape["seq"] > cfg.n_positions:
+            return None  # learned-position ctx limit (whisper: 448) §4
+        if any(k in (ATTN, CROSS_ATTN) for k in cfg.layer_kinds) \
+                and not cfg.sliding_window:
+            # dense/MoE/VLM: sliding-window variant for 500k decode
+            return dataclasses.replace(cfg,
+                                       sliding_window=SLIDING_WINDOW_500K)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    shape = SHAPES[shape_name]
+    b, s = shape["batch"], shape["seq"]
+    kind = shape["kind"]
+    i32 = jnp.int32
+    specs: dict = {}
+    if kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.encoder is not None:
+            specs["enc_embeds"] = F.frontend_spec(cfg, b)
+    elif kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["cache"] = M.abstract_cache(cfg, b, s)
+        if cfg.encoder is not None:
+            specs["enc_embeds"] = F.frontend_spec(cfg, b)
+    elif kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        specs["pos"] = jax.ShapeDtypeStruct((b,), i32)
+        specs["cache"] = M.abstract_cache(cfg, b, s, ring=True)
+    return specs

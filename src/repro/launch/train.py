@@ -1,0 +1,60 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --preset tiny --steps 100
+  (see examples/train_lm.py; this is the thin CLI wrapper around the
+  same substrate, plus --arch smoke training for any assigned arch)
+"""
+import argparse
+import dataclasses
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="train the reduced config of an assigned arch")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.models import frontends as F
+    from repro.models import model as M
+    from repro.train import data as D
+    from repro.train import optimizer as opt
+    from repro.train import trainer
+
+    if args.arch:
+        from repro.configs import get_smoke_config
+        cfg = dataclasses.replace(get_smoke_config(args.arch),
+                                  dtype="float32")
+    else:
+        import runpy
+        runpy.run_path("examples/train_lm.py", run_name="__main__")
+        return
+
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    state = opt.init(params)
+    has_enc = cfg.encoder is not None
+    step = jax.jit(trainer.make_train_step(
+        cfg, opt.AdamWConfig(lr=1e-3, warmup_steps=10,
+                             total_steps=args.steps),
+        has_encoder=has_enc))
+    stream = D.lm_batches(cfg.vocab_size, args.batch, args.seq, seed=0)
+    enc = F.fake_frontend(cfg, args.batch)
+    t0 = time.time()
+    for i, (toks, labels) in zip(range(args.steps), stream):
+        a = (params, state, jnp.asarray(toks), jnp.asarray(labels))
+        if has_enc:
+            a = a + (enc,)
+        params, state, loss = step(*a)
+        if i % 10 == 0:
+            print(f"step {i:4d} loss={float(loss):.3f}")
+    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s, "
+          f"final loss {float(loss):.3f}")
+
+
+if __name__ == "__main__":
+    main()

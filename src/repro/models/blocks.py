@@ -1,0 +1,263 @@
+"""Block composition: norm + temporal mixer + channel mixer per block kind,
+plus init/apply dispatch used by ``model.py``'s scan-over-layers.
+
+Every apply function has three modes:
+  * "train":   full sequence, no cache in/out (used by train_step)
+  * "prefill": full/chunk sequence, reads+writes a cache (chunked prefill)
+  * "decode":  one token, per-request positions ``pos: (b,)`` (serve_step)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp as mlpmod
+from repro.models import recurrent as rec
+from repro.models.config import (ATTN, CROSS_ATTN, LOCAL_ATTN, MLSTM, RGLRU,
+                                 SLSTM, ModelConfig)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def _scatter_kv(cache: jnp.ndarray, new: jnp.ndarray, slots: jnp.ndarray):
+    """Write one token per request at per-request slots.
+    cache: (b, S, ...), new: (b, 1, ...), slots: (b,) int32."""
+    def upd(c, n, s):
+        return jax.lax.dynamic_update_slice(
+            c, n.astype(c.dtype), (s,) + (0,) * (c.ndim - 1))
+    return jax.vmap(upd)(cache, new, slots)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_block(key, kind: str, cfg: ModelConfig, dtype,
+               use_moe: bool) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in (ATTN, LOCAL_ATTN, CROSS_ATTN):
+        if cfg.mla is not None:
+            a = attn.init_mla(ks[0], cfg, dtype)
+        else:
+            a = attn.init_gqa(ks[0], cfg, dtype)
+        p = {"norm1": jnp.ones((d,), dtype), "attn": a,
+             "norm2": jnp.ones((d,), dtype)}
+        if use_moe and cfg.moe is not None:
+            p["moe"] = mlpmod.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = mlpmod.init_mlp(ks[1], cfg, dtype)
+        if kind == CROSS_ATTN:
+            p["norm_c"] = jnp.ones((d,), dtype)
+            p["cross"] = attn.init_cross(ks[2], cfg, dtype)
+        return p
+    if kind == RGLRU:
+        return {"norm1": jnp.ones((d,), dtype),
+                "rglru": rec.init_rglru(ks[0], cfg, dtype),
+                "norm2": jnp.ones((d,), dtype),
+                "mlp": mlpmod.init_mlp(ks[1], cfg, dtype)}
+    if kind == SLSTM:
+        return {"norm": jnp.ones((d,), dtype),
+                "cell": rec.init_slstm(ks[0], cfg, dtype)}
+    if kind == MLSTM:
+        return {"norm": jnp.ones((d,), dtype),
+                "cell": rec.init_mlstm(ks[0], cfg, dtype)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# cache init (per block kind)
+# ---------------------------------------------------------------------------
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_seq: int,
+                     dtype, enc_ctx: int = 0,
+                     ring: bool = False) -> Optional[Dict[str, Any]]:
+    """``ring=True`` allocates windowed layers a ring buffer of window
+    slots instead of max_seq — decode-only shapes (long_500k).  Prefill
+    requires a full-length cache (ring=False)."""
+    hd = cfg.resolved_head_dim
+    kvh = cfg.n_kv_heads
+    if kind in (ATTN, LOCAL_ATTN, CROSS_ATTN):
+        window = cfg.local_window if kind == LOCAL_ATTN else cfg.sliding_window
+        s = min(max_seq, window) if (window and ring) else max_seq
+        if cfg.mla is not None:
+            m = cfg.mla
+            c = {"ckv": jnp.zeros((batch, s, m.kv_lora_rank), dtype),
+                 "krope": jnp.zeros((batch, s, m.qk_rope_head_dim), dtype)}
+        else:
+            c = {"k": jnp.zeros((batch, s, kvh, hd), dtype),
+                 "v": jnp.zeros((batch, s, kvh, hd), dtype)}
+        if kind == CROSS_ATTN:
+            c["ck"] = jnp.zeros((batch, enc_ctx, kvh, hd), dtype)
+            c["cv"] = jnp.zeros((batch, enc_ctx, kvh, hd), dtype)
+        return c
+    if kind == RGLRU:
+        return rec.rglru_init_state(cfg, batch, dtype)
+    if kind == SLSTM:
+        return rec.slstm_init_state(cfg, batch, dtype)
+    if kind == MLSTM:
+        return rec.mlstm_init_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+def apply_block(kind: str, p: Dict[str, Any], cfg: ModelConfig,
+                x: jnp.ndarray, *, mode: str,
+                cache: Optional[Dict[str, Any]] = None,
+                pos: Optional[jnp.ndarray] = None, q_offset=0,
+                enc: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = (cfg.local_window if kind == LOCAL_ATTN
+              else cfg.sliding_window)
+
+    if kind in (ATTN, LOCAL_ATTN, CROSS_ATTN):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        new_cache = cache
+        if mode == "train":
+            if cfg.mla is not None:
+                a = attn.mla_forward(p["attn"], cfg, h, window=window)
+            else:
+                a = attn.gqa_forward(p["attn"], cfg, h, window=window)
+        elif mode == "prefill":
+            sub = {k2: cache[k2] for k2 in cache if k2 not in ("ck", "cv")}
+            if cfg.mla is not None:
+                a, sub = attn.mla_prefill(p["attn"], cfg, h, sub,
+                                          q_offset=q_offset, window=window)
+            else:
+                a, sub = attn.gqa_prefill(p["attn"], cfg, h, sub,
+                                          q_offset=q_offset, window=window)
+            new_cache = dict(cache, **sub)
+        else:  # decode
+            sub = {k2: cache[k2] for k2 in cache if k2 not in ("ck", "cv")}
+            if cfg.mla is not None:
+                a, sub = _mla_decode_batched(p["attn"], cfg, h, sub, pos,
+                                             window)
+            else:
+                a, sub = _gqa_decode_batched(p["attn"], cfg, h, sub, pos,
+                                             window)
+            new_cache = dict(cache, **sub)
+        x = x + a
+
+        if kind == CROSS_ATTN:
+            hc = rms_norm(x, p["norm_c"], cfg.norm_eps)
+            if mode == "train" or (mode == "prefill" and enc is not None):
+                ck, cv = attn.cross_kv(p["cross"], cfg, enc)
+                if mode == "prefill":
+                    new_cache = dict(new_cache, ck=ck.astype(cache["ck"].dtype),
+                                     cv=cv.astype(cache["cv"].dtype))
+            else:
+                ck, cv = new_cache["ck"], new_cache["cv"]
+            x = x + attn.cross_forward(p["cross"], cfg, hc, ck, cv)
+
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if "moe" in p:
+            m, aux = mlpmod.moe_forward(p["moe"], cfg, h2)
+        else:
+            m = mlpmod.mlp_forward(p["mlp"], cfg, h2)
+        return x + m, new_cache, aux
+
+    if kind == RGLRU:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        if mode == "train":
+            r, new_cache = rec.rglru_forward(p["rglru"], cfg, h, None)
+        elif mode == "prefill":
+            r, new_cache = rec.rglru_forward(p["rglru"], cfg, h, cache)
+        else:
+            r, new_cache = rec.rglru_decode(p["rglru"], cfg, h, cache)
+        x = x + r
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        return x + mlpmod.mlp_forward(p["mlp"], cfg, h2), new_cache, aux
+
+    if kind in (SLSTM, MLSTM):
+        h = rms_norm(x, p["norm"], cfg.norm_eps)
+        fwd = rec.slstm_forward if kind == SLSTM else rec.mlstm_forward
+        dec = rec.slstm_decode if kind == SLSTM else rec.mlstm_decode
+        if mode == "train":
+            r, new_cache = fwd(p["cell"], cfg, h, None)
+        elif mode == "prefill":
+            r, new_cache = fwd(p["cell"], cfg, h, cache)
+        else:
+            r, new_cache = dec(p["cell"], cfg, h, cache)
+        return x + r, new_cache, aux
+
+    raise ValueError(kind)
+
+
+# --- batched decode with per-request positions ------------------------------
+def _gqa_decode_batched(p, cfg, x, cache, pos, window):
+    b = x.shape[0]
+    positions = pos[:, None]                          # (b,1)
+    q, k, v = attn.gqa_qkv(p, cfg, x, positions)
+    s_cache = cache["k"].shape[1]
+    ring = window > 0 and s_cache <= window
+    slots = jax.lax.rem(pos, s_cache) if ring else jnp.minimum(pos, s_cache - 1)
+    k_cache = _scatter_kv(cache["k"], k, slots)
+    v_cache = _scatter_kv(cache["v"], v, slots)
+    out = _decode_attn_batched(q, k_cache, v_cache, pos, window, ring)
+    out = out.reshape(b, 1, -1) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _decode_attn_batched(q, k_cache, v_cache, pos, window, ring):
+    """decode_attn with per-request pos: (b,)."""
+    b, s, kvh, hd = k_cache.shape
+    h = q.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, 1, kvh, rep, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg,
+                        k_cache.astype(jnp.float32)) * hd ** -0.5
+    idx = jnp.arange(s)[None, :]                      # (1,s)
+    pb = pos[:, None]
+    if ring:
+        valid = idx < jnp.minimum(pb + 1, s)
+    else:
+        valid = idx <= pb
+        if window:
+            valid = valid & (idx > pb - window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, attn.NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", pr, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def _mla_decode_batched(p, cfg, x, cache, pos, window):
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = pos[:, None]
+    q_nope, q_rope = attn._mla_q(p, cfg, x, positions)
+    c_kv, k_rope = attn._mla_kv_latent(p, cfg, x, positions)
+    s_cache = cache["ckv"].shape[1]
+    slots = jnp.minimum(pos, s_cache - 1)
+    ckv_cache = _scatter_kv(cache["ckv"], c_kv, slots)
+    kr_cache = _scatter_kv(cache["krope"], k_rope, slots)
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h,
+                               m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[:, :, :m.qk_nope_head_dim]
+    w_uv = wkv_b[:, :, m.qk_nope_head_dim:]
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bqhl,bsl->bhqs", q_lat,
+                         ckv_cache.astype(jnp.float32))
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                           kr_cache.astype(jnp.float32))) * scale
+    idx = jnp.arange(s_cache)[None, :]
+    valid = idx <= pos[:, None]
+    if window:
+        valid = valid & (idx > (pos[:, None] - window))
+    scores = jnp.where(valid[:, None, None, :], scores, attn.NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsl->bqhl", pr, ckv_cache.astype(jnp.float32))
+    out = jnp.einsum("bqhl,lhv->bqhv", o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, -1).astype(x.dtype) @ p["wo"]
+    return out, {"ckv": ckv_cache, "krope": kr_cache}

@@ -1,0 +1,37 @@
+"""Stub modality frontends (the assignment's one carve-out).
+
+``[audio]``/``[vlm]`` configs specify the transformer backbone only; the
+mel-spectrogram+conv feature extractor (whisper) and the ViT/SigLIP
+vision tower + projector (VLM) are NOT implemented.  Instead these
+helpers produce the precomputed frame/patch embeddings the backbone
+consumes — as real arrays (runtime/smoke) or ShapeDtypeStructs (dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def frontend_shape(cfg: ModelConfig, batch: int):
+    """(batch, n_ctx, d_model) of the stub frontend output, or None."""
+    if cfg.encoder is None:
+        return None
+    return (batch, cfg.encoder.n_ctx, cfg.encoder.d_model or cfg.d_model)
+
+
+def frontend_spec(cfg: ModelConfig, batch: int):
+    shape = frontend_shape(cfg, batch)
+    if shape is None:
+        return None
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(cfg.dtype))
+
+
+def fake_frontend(cfg: ModelConfig, batch: int, key=None):
+    """Deterministic fake frame/patch embeddings for tests/examples."""
+    shape = frontend_shape(cfg, batch)
+    if shape is None:
+        return None
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.random.normal(key, shape, jnp.dtype(cfg.dtype)) * 0.02

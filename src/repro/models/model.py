@@ -1,0 +1,352 @@
+"""Model assembly: embeddings, scan-over-layers stack, heads, caches.
+
+Entry points (all pure functions of (params, cfg, ...)):
+  * ``init_params``      — random init (smoke/runtime scale)
+  * ``abstract_params``  — ShapeDtypeStruct params via eval_shape (dry-run)
+  * ``init_cache``       — per-layer decode/prefill cache pytree
+  * ``forward_train``    — full-sequence logits (+ MoE aux loss)
+  * ``prefill``          — one chunk: logits of last position + cache
+  * ``prefill_chunked``  — the paper's fixed-size chunk loop (lax.scan)
+  * ``decode_step``      — one token per request, per-request positions
+  * ``classify``         — length-predictor classification head
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import sharding as SH
+from repro.models.config import CROSS_ATTN, ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    cfg.validate()
+    dtype = _dtype(cfg)
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, d),
+                                   dtype) * d ** -0.5,
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if cfg.n_positions:
+        params["pos_embed"] = jax.random.normal(
+            keys[1], (cfg.n_positions, d), dtype) * d ** -0.5
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[2], (d, cfg.vocab_size), dtype) * d ** -0.5
+    if cfg.n_classes:
+        params["cls_head"] = jax.random.normal(
+            keys[3], (d, cfg.n_classes), dtype) * d ** -0.5
+
+    # prefix / suffix blocks (unrolled).  MoE rule: when cfg.moe is set,
+    # prefix blocks are dense (DeepSeek-V2 first-k-dense), others routed.
+    pkeys = jax.random.split(keys[4], max(1, len(cfg.prefix)))
+    params["prefix"] = tuple(
+        B.init_block(pkeys[i], k, cfg, dtype, use_moe=False)
+        for i, k in enumerate(cfg.prefix))
+    skeys = jax.random.split(keys[5], max(1, len(cfg.suffix)))
+    params["suffix"] = tuple(
+        B.init_block(skeys[i], k, cfg, dtype, use_moe=cfg.moe is not None)
+        for i, k in enumerate(cfg.suffix))
+
+    # scanned body: stacked params, one stack entry per repeat
+    if cfg.n_repeats:
+        def one_group(k):
+            gks = jax.random.split(k, len(cfg.pattern))
+            return tuple(
+                B.init_block(gks[i], kind, cfg, dtype,
+                             use_moe=cfg.moe is not None)
+                for i, kind in enumerate(cfg.pattern))
+        gkeys = jax.random.split(keys[6], cfg.n_repeats)
+        params["body"] = jax.vmap(one_group)(gkeys)
+    else:
+        params["body"] = ()
+
+    # encoder stack (whisper): bidirectional ATTN blocks, unrolled
+    if cfg.is_encoder_decoder:
+        ekeys = jax.random.split(keys[7], cfg.encoder.n_layers + 1)
+        params["encoder"] = {
+            "blocks": tuple(
+                B.init_block(ekeys[i], "attn", cfg, dtype, use_moe=False)
+                for i in range(cfg.encoder.n_layers)),
+            "norm": jnp.ones((d,), dtype),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of params — no allocation (dry-run)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    return sum(math.prod(l.shape)
+               for l in jax.tree_util.tree_leaves(abstract_params(cfg)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k of routed experts)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    # subtract inactive routed expert params in body+suffix layers
+    moe_layers = sum(1 for i, k in enumerate(cfg.layer_kinds)
+                     if i >= len(cfg.prefix))
+    ff = cfg.moe.expert_ff or cfg.d_ff
+    glu = 3 if cfg.mlp_act == "swiglu" else 2
+    per_expert = glu * cfg.d_model * ff
+    inactive = moe_layers * (cfg.moe.n_experts - cfg.moe.top_k) * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=None, ring: bool = False) -> Dict[str, Any]:
+    dtype = dtype or _dtype(cfg)
+    enc_ctx = cfg.encoder.n_ctx if cfg.encoder is not None else 0
+
+    def mk(kind):
+        return B.init_block_cache(kind, cfg, batch, max_seq, dtype,
+                                  enc_ctx=enc_ctx, ring=ring)
+    cache: Dict[str, Any] = {
+        "prefix": tuple(mk(k) for k in cfg.prefix),
+        "suffix": tuple(mk(k) for k in cfg.suffix),
+    }
+    if cfg.n_repeats:
+        group = tuple(mk(k) for k in cfg.pattern)
+        cache["body"] = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((cfg.n_repeats,) + l.shape, l.dtype), group)
+    else:
+        cache["body"] = ()
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
+                   ring: bool = False):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_seq, dtype, ring))
+
+
+def _batch_axis(path) -> int:
+    """Batch axis of a cache leaf: scanned body leaves carry a leading
+    repeats dim, so batch sits at axis 1 there, else axis 0."""
+    for e in path:
+        if hasattr(e, "key") and str(e.key) == "body":
+            return 1
+    return 0
+
+
+def cache_insert(dst_cache, src_cache, slot: int):
+    """Copy a batch=1 cache pytree into slot ``slot`` of a slot-batched
+    cache with identical structure/seq dims (decode-engine admission)."""
+    def ins(path, dst, src):
+        ax = _batch_axis(path)
+        start = [0] * dst.ndim
+        start[ax] = slot
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                            tuple(start))
+    return jax.tree_util.tree_map_with_path(ins, dst_cache, src_cache)
+
+
+def cache_select(src_cache, slot: int):
+    """Extract slot ``slot`` as a batch=1 cache pytree."""
+    def sel(path, leaf):
+        ax = _batch_axis(path)
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+    return jax.tree_util.tree_map_with_path(sel, src_cache)
+
+
+# ---------------------------------------------------------------------------
+# layer runner
+# ---------------------------------------------------------------------------
+def _run_layers(params, cfg: ModelConfig, h, *, mode: str, caches=None,
+                pos=None, q_offset=0, enc=None):
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {"prefix": [], "suffix": [], "body": ()}
+
+    def _run_block(kind, p, x, c):
+        return B.apply_block(kind, p, cfg, x, mode=mode, cache=c, pos=pos,
+                             q_offset=q_offset, enc=enc)
+
+    if mode == "train":
+        # per-layer remat: backward stores only layer inputs, recomputes
+        # attention/MLP internals — required for 4k-seq training to fit
+        run_one = jax.checkpoint(_run_block, static_argnums=(0,))
+    else:
+        run_one = _run_block
+
+    h = SH.act_constrain(h)
+    for i, kind in enumerate(cfg.prefix):
+        c = caches["prefix"][i] if caches is not None else None
+        h, nc, a = run_one(kind, params["prefix"][i], h, c)
+        h = SH.act_constrain(h)
+        aux += a
+        new_caches["prefix"].append(nc)
+
+    if cfg.n_repeats:
+        def body_fn(carry, xs):
+            x, aux_c = carry
+            if caches is not None:
+                gp, gc = xs
+            else:
+                gp, gc = xs, tuple({} for _ in cfg.pattern)
+            ncs = []
+            for j, kind in enumerate(cfg.pattern):
+                x, nc, a = run_one(kind, gp[j],
+                                   x, gc[j] if caches is not None else None)
+                x = SH.act_constrain(x)
+                aux_c += a
+                ncs.append(nc if nc is not None else {})
+            return (x, aux_c), tuple(ncs)
+
+        xs = ((params["body"], caches["body"]) if caches is not None
+              else params["body"])
+        (h, aux), body_caches = jax.lax.scan(body_fn, (h, aux), xs)
+        new_caches["body"] = body_caches
+
+    for i, kind in enumerate(cfg.suffix):
+        c = caches["suffix"][i] if caches is not None else None
+        h, nc, a = run_one(kind, params["suffix"][i], h, c)
+        h = SH.act_constrain(h)
+        aux += a
+        new_caches["suffix"].append(nc)
+
+    new_caches["prefix"] = tuple(new_caches["prefix"])
+    new_caches["suffix"] = tuple(new_caches["suffix"])
+    return h, (new_caches if caches is not None else None), aux
+
+
+# ---------------------------------------------------------------------------
+# embeddings / heads
+# ---------------------------------------------------------------------------
+def _embed(params, cfg: ModelConfig, tokens, positions):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.n_positions:
+        idx = jnp.minimum(positions, cfg.n_positions - 1)
+        h = h + jnp.take(params["pos_embed"], idx, axis=0)
+    return h
+
+
+def _head(params, cfg: ModelConfig, h):
+    h = B.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["embed"].T if cfg.tie_embeddings
+              else h @ params["lm_head"])
+    return SH.act_constrain(logits, vocab_dim=True)
+
+
+def encoder_forward(params, cfg: ModelConfig, enc_embeds):
+    """Bidirectional encoder stack over stub-frontend embeddings."""
+    h = enc_embeds
+    for p in params["encoder"]["blocks"]:
+        n = B.rms_norm(h, p["norm1"], cfg.norm_eps)
+        from repro.models import attention as A
+        b, s, _ = n.shape
+        positions = jnp.arange(s)[None, :]
+        q, k, v = A.gqa_qkv(p["attn"], cfg, n, positions)
+        a = A.flash_attn(q, k, v, causal=False)
+        h = h + a.reshape(b, s, -1) @ p["attn"]["wo"]
+        n2 = B.rms_norm(h, p["norm2"], cfg.norm_eps)
+        from repro.models import mlp as M
+        h = h + M.mlp_forward(p["mlp"], cfg, n2)
+    return B.rms_norm(h, params["encoder"]["norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def forward_train(params, cfg: ModelConfig, tokens, *,
+                  enc_embeds=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (b, s) int32 -> (logits (b,s,V), aux_loss)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    h = _embed(params, cfg, tokens, positions)
+    enc = None
+    if enc_embeds is not None:
+        enc = (encoder_forward(params, cfg, enc_embeds)
+               if cfg.is_encoder_decoder else enc_embeds)
+    h, _, aux = _run_layers(params, cfg, h, mode="train", enc=enc)
+    return _head(params, cfg, h), aux
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, *, q_offset=0,
+            enc_embeds=None):
+    """One prefill chunk. tokens: (b, chunk). Returns (logits_last, cache)."""
+    b, s = tokens.shape
+    positions = q_offset + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    h = _embed(params, cfg, tokens, positions)
+    enc = None
+    if enc_embeds is not None:
+        enc = (encoder_forward(params, cfg, enc_embeds)
+               if cfg.is_encoder_decoder else enc_embeds)
+    h, cache, _ = _run_layers(params, cfg, h, mode="prefill", caches=cache,
+                              q_offset=q_offset, enc=enc)
+    logits = _head(params, cfg, h[:, -1:])
+    return logits, cache
+
+
+def prefill_chunked(params, cfg: ModelConfig, tokens, cache, *,
+                    chunk_size: int, enc_embeds=None):
+    """The paper's chunked prefill: fixed-size chunks via lax.scan.
+
+    tokens: (b, S) with S % chunk_size == 0 (pre-padded by the engine).
+    The first chunk also prefills encoder/cross KV (enc_embeds).
+    """
+    b, s = tokens.shape
+    assert s % chunk_size == 0, "pad prompts to a multiple of ChunkSize"
+    nchunks = s // chunk_size
+    enc = None
+    if enc_embeds is not None:
+        enc = (encoder_forward(params, cfg, enc_embeds)
+               if cfg.is_encoder_decoder else enc_embeds)
+    chunks = tokens.reshape(b, nchunks, chunk_size).transpose(1, 0, 2)
+
+    def step(cache, xs):
+        idx, chunk = xs
+        q_offset = idx * chunk_size
+        positions = q_offset + jnp.arange(chunk_size)[None, :]
+        h = _embed(params, cfg, chunk,
+                   jnp.broadcast_to(positions, (b, chunk_size)))
+        h, cache, _ = _run_layers(params, cfg, h, mode="prefill",
+                                  caches=cache, q_offset=q_offset, enc=enc)
+        return cache, h[:, -1]
+
+    cache, last_h = jax.lax.scan(step, cache, (jnp.arange(nchunks), chunks))
+    logits = _head(params, cfg, last_h[-1][:, None])
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    """tokens: (b, 1); pos: (b,) current positions. -> (logits, cache)."""
+    b = tokens.shape[0]
+    h = _embed(params, cfg, tokens, pos[:, None])
+    h, cache, _ = _run_layers(params, cfg, h, mode="decode", caches=cache,
+                              pos=pos)
+    return _head(params, cfg, h), cache
+
+
+def classify(params, cfg: ModelConfig, tokens, lengths):
+    """Length-predictor head: mean-pool valid tokens -> (b, n_classes)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    h = _embed(params, cfg, tokens, positions)
+    h, _, _ = _run_layers(params, cfg, h, mode="train")
+    mask = (jnp.arange(s)[None, :] < lengths[:, None]).astype(h.dtype)
+    pooled = (h * mask[..., None]).sum(1) / jnp.maximum(
+        mask.sum(1, keepdims=True), 1.0)
+    return pooled @ params["cls_head"]

@@ -1,0 +1,344 @@
+"""Recurrent temporal-mixing blocks: RG-LRU (RecurrentGemma/Griffin) and
+xLSTM's sLSTM / mLSTM cells.
+
+TPU adaptation notes (DESIGN.md §3):
+  * RG-LRU prefill uses ``jax.lax.associative_scan`` — log-depth parallel
+    scan, the TPU-native replacement for the CUDA linear-scan kernel.
+  * sLSTM/mLSTM prefill uses a chunked ``lax.scan`` with a rematerialized
+    inner scan so backward memory is O(seq/chunk) carries, not O(seq).
+  * All cells carry O(1) state => "KV transfer" for these layers ships a
+    constant-size state (see core/kv_transfer.py), and long_500k decode is
+    natively sub-quadratic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_CHUNK = 256  # inner-scan chunk for remat'd sequential cells
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, state=None):
+    """Depthwise causal conv. x: (b,s,c), w: (width,c). state: (b,width-1,c)
+    carries the last inputs for decode. Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, xp.shape[1] - (width - 1):]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    sc = d ** -0.5
+    return {
+        "wx": jax.random.normal(ks[0], (d, lru), dtype) * sc,
+        "wy": jax.random.normal(ks[1], (d, lru), dtype) * sc,
+        "conv_w": jax.random.normal(ks[2], (cfg.rglru_conv_width, lru),
+                                    dtype) * 0.1,
+        "w_a": jax.random.normal(ks[3], (lru, lru), dtype) * lru ** -0.5,
+        "b_a": jnp.zeros((lru,), dtype),
+        "w_i": jax.random.normal(ks[4], (lru, lru), dtype) * lru ** -0.5,
+        "b_i": jnp.zeros((lru,), dtype),
+        # Lambda init so decay in [0.9, 0.999] at r=1 (Griffin appendix)
+        "a_param": jax.random.uniform(ks[5], (lru,), jnp.float32, 2.0, 6.0),
+        "w_out": jax.random.normal(ks[6], (lru, d), dtype) * lru ** -0.5,
+    }
+
+
+def _rglru_gates(p, u):
+    c = 8.0
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_a"].astype(jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_i"].astype(jnp.float32)
+                       + p["b_i"].astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(p["a_param"]) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_forward(p: dict, cfg: ModelConfig, x: jnp.ndarray, state=None):
+    """Full-sequence RG-LRU block. x: (b,s,d). state: {"h","conv"} or None.
+    Returns (out, new_state)."""
+    b, s, d = x.shape
+    u = x @ p["wx"]
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv1d(u, p["conv_w"], conv_state)
+    a, gin = _rglru_gates(p, u)                       # (b,s,lru) f32
+    if state is not None:
+        # fold carried h into the first step: h_0' contributes a_1*h_prev
+        gin = gin.at[:, 0].add(a[:, 0] * state["h"])
+    # h_t = a_t h_{t-1} + gin_t  — parallel associative scan over time
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+    a_cum, h = jax.lax.associative_scan(combine, (a, gin), axis=1)
+    y = h.astype(x.dtype) * jax.nn.gelu(x @ p["wy"])
+    out = y @ p["w_out"]
+    new_state = {"h": h[:, -1], "conv": new_conv}
+    return out, new_state
+
+
+def rglru_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, state: dict):
+    """One-step RG-LRU. x: (b,1,d)."""
+    u = x @ p["wx"]
+    u, new_conv = _causal_conv1d(u, p["conv_w"], state["conv"])
+    a, gin = _rglru_gates(p, u)
+    h = a[:, 0] * state["h"] + gin[:, 0]
+    y = h[:, None].astype(x.dtype) * jax.nn.gelu(x @ p["wy"])
+    out = y @ p["w_out"]
+    return out, {"h": h, "conv": new_conv}
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    lru = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, lru), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, lru), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM) — scalar memory, exponential gating, recurrent connections
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 4)
+    ff = int(d * 4 / 3 // 2 * 2)
+    return {
+        "w": jax.random.normal(ks[0], (d, 4 * d), dtype) * d ** -0.5,
+        "r": jax.random.normal(ks[1], (nh, dh, 4 * dh), dtype) * dh ** -0.5,
+        "b": jnp.zeros((4 * d,), dtype),
+        # post-up projection (proj factor 4/3, GeLU)
+        "up": jax.random.normal(ks[2], (d, 2 * ff), dtype) * d ** -0.5,
+        "down": jax.random.normal(ks[3], (ff, d), dtype) * ff ** -0.5,
+    }
+
+
+def _slstm_step(p, cfg, wx_t, state):
+    """wx_t: (b, 4d) precomputed W x_t + b. state: c,n,h,m each (b,d)."""
+    nh = cfg.n_heads
+    b = wx_t.shape[0]
+    d = wx_t.shape[1] // 4
+    dh = d // nh
+    h_prev = state["h"].reshape(b, nh, dh)
+    rec = jnp.einsum("bhd,hde->bhe", h_prev.astype(p["r"].dtype), p["r"])
+    gates = (wx_t.reshape(b, nh, 4 * dh) + rec).astype(jnp.float32)
+    z_r, i_r, f_r, o_r = jnp.split(gates, 4, axis=-1)   # (b,nh,dh)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    log_f = jax.nn.log_sigmoid(f_r)
+    m_prev, c_prev, n_prev = (state["m"].reshape(b, nh, dh),
+                              state["c"].reshape(b, nh, dh),
+                              state["n"].reshape(b, nh, dh))
+    m = jnp.maximum(log_f + m_prev, i_r)
+    i_g = jnp.exp(i_r - m)
+    f_g = jnp.exp(log_f + m_prev - m)
+    c = f_g * c_prev + i_g * z
+    n = f_g * n_prev + i_g
+    h = o * (c / jnp.maximum(jnp.abs(n), 1.0))
+    new = {"c": c.reshape(b, d), "n": n.reshape(b, d),
+           "h": h.reshape(b, d), "m": m.reshape(b, d)}
+    return h.reshape(b, d), new
+
+
+def _chunked_scan(step_fn, state, xs, chunk: int):
+    """lax.scan over chunks with a remat'd inner scan => O(S/chunk) saved
+    carries instead of O(S).  Steps beyond the true sequence length are
+    masked so padding never pollutes the carried state."""
+    s = xs.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad)) + ((0, 0),) * (xs.ndim - 2))
+    nchunk = xs.shape[1] // chunk
+    xc = xs.reshape(xs.shape[0], nchunk, chunk, *xs.shape[2:])
+    xc = jnp.moveaxis(xc, 1, 0)                     # (nchunk, b, chunk, ...)
+    valid = (jnp.arange(nchunk * chunk) < s).reshape(nchunk, chunk)
+
+    @jax.checkpoint
+    def chunk_body(carry, xv):
+        xchunk, vchunk = xv
+        def inner(c, xt):
+            x_t, v_t = xt
+            y, c2 = step_fn(x_t, c)
+            c2 = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(v_t, a, b), c2, c)
+            return c2, y
+        carry, ys = jax.lax.scan(inner, carry,
+                                 (jnp.moveaxis(xchunk, 1, 0), vchunk))
+        return carry, ys                            # ys: (chunk, b, d)
+
+    state, ys = jax.lax.scan(chunk_body, state, (xc, valid))
+    ys = ys.reshape(-1, *ys.shape[2:])              # (nchunk*chunk, b, d)
+    ys = jnp.moveaxis(ys, 0, 1)[:, :s]
+    return ys, state
+
+
+def slstm_forward(p: dict, cfg: ModelConfig, x: jnp.ndarray, state=None):
+    b, s, d = x.shape
+    if state is None:
+        state = slstm_init_state(cfg, b, x.dtype)
+    wx = x @ p["w"] + p["b"]                        # (b,s,4d)
+    step = lambda xt, st: _slstm_step(p, cfg, xt, st)
+    h_seq, new_state = _chunked_scan(step, state, wx, _CHUNK)
+    h_seq = h_seq.astype(x.dtype)
+    up = h_seq @ p["up"]
+    gate, val = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(gate) * val) @ p["down"]
+    return out, new_state
+
+
+def slstm_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, state: dict):
+    wx = (x @ p["w"] + p["b"])[:, 0]
+    h, new_state = _slstm_step(p, cfg, wx, state)
+    h = h[:, None].astype(x.dtype)
+    gate, val = jnp.split(h @ p["up"], 2, axis=-1)
+    out = (jax.nn.gelu(gate) * val) @ p["down"]
+    return out, new_state
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": z()}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM) — matrix memory C, pre-up projection block
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ud = 2 * d                                       # pre-up factor 2
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": jax.random.normal(ks[0], (d, 2 * ud), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (4, ud), dtype) * 0.1,
+        "wq": jax.random.normal(ks[2], (ud, ud), dtype) * ud ** -0.5,
+        "wk": jax.random.normal(ks[3], (ud, ud), dtype) * ud ** -0.5,
+        "wv": jax.random.normal(ks[4], (ud, ud), dtype) * ud ** -0.5,
+        "w_if": jax.random.normal(ks[5], (ud, 2 * nh), dtype) * ud ** -0.5,
+        "b_if": jnp.zeros((2 * nh,), dtype),
+        "w_down": jax.random.normal(ks[6], (ud, d), dtype) * ud ** -0.5,
+    }
+
+
+def _mlstm_step(p, cfg, qkvif_t, state):
+    """qkvif_t: dict of per-step tensors. state: C (b,nh,dh,dh), n, m."""
+    q, k, v, i_r, f_r = (qkvif_t["q"], qkvif_t["k"], qkvif_t["v"],
+                         qkvif_t["i"], qkvif_t["f"])   # (b,nh,dh),(b,nh)
+    dh = q.shape[-1]
+    log_f = jax.nn.log_sigmoid(f_r.astype(jnp.float32))
+    m = jnp.maximum(log_f + state["m"], i_r.astype(jnp.float32))
+    i_g = jnp.exp(i_r.astype(jnp.float32) - m)[..., None]         # (b,nh,1)
+    f_g = jnp.exp(log_f + state["m"] - m)[..., None]
+    kf = k.astype(jnp.float32) * dh ** -0.5
+    c_new = f_g[..., None] * state["C"] + i_g[..., None] * (
+        v.astype(jnp.float32)[..., :, None] * kf[..., None, :])
+    n_new = f_g * state["n"] + i_g * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf)), 1.0)
+    h = num / den[..., None]                                      # (b,nh,dh)
+    return h, {"C": c_new, "n": n_new, "m": m}
+
+
+def _mlstm_qkvif(p, cfg, x, conv_state):
+    b, s, d = x.shape
+    ud = 2 * d
+    nh = cfg.n_heads
+    dh = ud // nh
+    up = x @ p["w_up"]
+    xin, gate = jnp.split(up, 2, axis=-1)            # (b,s,ud)
+    xc, new_conv = _causal_conv1d(xin, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"]).reshape(b, s, nh, dh)
+    k = (xc @ p["wk"]).reshape(b, s, nh, dh)
+    v = (xin @ p["wv"]).reshape(b, s, nh, dh)
+    i_f = xc @ p["w_if"] + p["b_if"]                 # (b,s,2nh)
+    i_r, f_r = jnp.split(i_f, 2, axis=-1)
+    return {"q": q, "k": k, "v": v, "i": i_r, "f": f_r}, gate, new_conv
+
+
+def mlstm_forward(p: dict, cfg: ModelConfig, x: jnp.ndarray, state=None):
+    b, s, d = x.shape
+    if state is None:
+        state = mlstm_init_state(cfg, b, x.dtype)
+    qkvif, gate, new_conv = _mlstm_qkvif(p, cfg, x, state["conv"])
+    cell = {"C": state["C"], "n": state["n"], "m": state["m"]}
+
+    # pack per-step tensors to (b, s, ...) pytree for the chunked scan
+    def step(xt, st):
+        t = {k2: xt[k2] for k2 in ("q", "k", "v", "i", "f")}
+        h, st2 = _mlstm_step(p, cfg, t, st)
+        return h, st2
+
+    # flatten heads into the scanned tensor dict via a structured scan
+    s_len = s
+    pad = (-s_len) % _CHUNK
+    def pad_t(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2)) \
+            if pad else t
+    qkvif = {k2: pad_t(v2) for k2, v2 in qkvif.items()}
+    nchunk = (s_len + pad) // _CHUNK
+    chunked = {k2: jnp.moveaxis(
+        v2.reshape(b, nchunk, _CHUNK, *v2.shape[2:]), 1, 0)
+        for k2, v2 in qkvif.items()}
+    valid = (jnp.arange(nchunk * _CHUNK) < s_len).reshape(nchunk, _CHUNK)
+
+    @jax.checkpoint
+    def chunk_body(carry, xv):
+        xchunk, vchunk = xv
+        def inner(c, xt):
+            x_t, v_t = xt
+            h, c2 = step(x_t, c)
+            c2 = jax.tree_util.tree_map(
+                lambda a, b2: jnp.where(v_t, a, b2), c2, c)
+            return c2, h
+        carry, hs = jax.lax.scan(
+            inner, carry, ({k2: jnp.moveaxis(v2, 1, 0)
+                            for k2, v2 in xchunk.items()}, vchunk))
+        return carry, hs
+
+    cell, hs = jax.lax.scan(chunk_body, cell, (chunked, valid))
+    hs = hs.reshape(-1, *hs.shape[2:])               # (S, b, nh, dh)
+    hs = jnp.moveaxis(hs, 0, 1)[:, :s_len]
+    h_seq = hs.reshape(b, s_len, -1).astype(x.dtype)
+    out = (h_seq * jax.nn.silu(gate)) @ p["w_down"]
+    return out, {"C": cell["C"], "n": cell["n"], "m": cell["m"],
+                 "conv": new_conv}
+
+
+def mlstm_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, state: dict):
+    qkvif, gate, new_conv = _mlstm_qkvif(p, cfg, x, state["conv"])
+    t = {k2: v2[:, 0] for k2, v2 in qkvif.items()}
+    cell = {"C": state["C"], "n": state["n"], "m": state["m"]}
+    h, cell = _mlstm_step(p, cfg, t, cell)
+    h = h.reshape(x.shape[0], 1, -1).astype(x.dtype)
+    out = (h * jax.nn.silu(gate)) @ p["w_down"]
+    return out, {**cell, "conv": new_conv}
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    ud = 2 * d
+    nh = cfg.n_heads
+    dh = ud // nh
+    return {"C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.zeros((batch, nh), jnp.float32),
+            "conv": jnp.zeros((batch, 3, ud), dtype)}

@@ -1,0 +1,327 @@
+"""Sharding rules: param/cache/activation PartitionSpecs for the production
+mesh, with divisibility-aware fallbacks.
+
+Conventions (DESIGN.md §5):
+  * ``model`` axis: tensor parallel — attention head/ff/expert dims.
+  * ``data`` axis: batch parallel; optionally FSDP (weights' d_model dim).
+  * ``pod`` axis (multi-pod): extra batch parallelism for train/serve, or
+    the prefill/decode disaggregation axis for ``disagg_step``.
+
+Every rule degrades to replication when a dim is not divisible by the
+mesh axis size (e.g. qwen2's 14 heads on a 16-way model axis: heads stay
+replicated, the 4864-wide FFN and the 151936 vocab still shard).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# param-name classes ---------------------------------------------------------
+_COLUMN = {"wq", "wk", "wv", "wi", "wx", "wy", "w_up", "w_a", "w_i", "wq_a",
+           "wq_b", "wkv_a", "wkv_b", "up", "w", "shared_wi", "lm_head",
+           "cls_head"}
+_ROW = {"wo", "w_out", "down", "w_down", "shared_wo"}
+_VEC_SHARD = {"bq", "bk", "bv", "b"}           # 1-D, shard if divisible
+_REPLICATE = {"norm1", "norm2", "norm", "norm_c", "final_norm", "q_norm",
+              "kv_norm", "b_a", "b_i", "b_if", "a_param", "router",
+              "pos_embed", "conv_w", "w_if"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(str(e.idx))
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return tuple(names)
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def param_spec(path, leaf, *, model_size: int, data_size: int = 0,
+               fsdp: bool = False, serve2d: bool = False) -> P:
+    """PartitionSpec for one param leaf.
+
+    ``fsdp``: additionally shard a second dim over ``data`` — weights are
+    all-gathered per layer (training; amortized over fwd+bwd).
+    ``serve2d``: expert weights shard BOTH the expert dim (model) and the
+    expert-ff dim (data) as *tensor* parallelism — compute runs on the
+    shards and partial sums all-reduce, so chunked prefill never
+    re-gathers the (huge) expert weights per chunk.  Big-MoE serving.
+    """
+    names = _path_names(path)
+    name = names[-1]
+    stacked = "body" in names          # scanned stack: leading repeats dim
+    shape = leaf.shape[1:] if stacked else leaf.shape
+    spec: list = [None] * len(shape)
+
+    def try_shard(dim_idx: int, axis: str, size: int) -> bool:
+        if spec[dim_idx] is None and _div(shape[dim_idx], size):
+            spec[dim_idx] = axis
+            return True
+        return False
+
+    if name == "embed":
+        try_shard(0, "model", model_size)          # vocab
+        if fsdp:
+            try_shard(1, "data", data_size)
+    elif name in ("wi", "wo", "shared_wi", "shared_wo") and len(shape) == 3:
+        # MoE expert weights (E, in, out): expert-parallel if E divides,
+        # else fall back to ff-dim tensor parallel.
+        if not try_shard(0, "model", model_size):
+            ff_dim = 2 if name in ("wi", "shared_wi") else 1
+            try_shard(ff_dim, "model", model_size)
+        if serve2d:
+            ff_dim = 2 if name in ("wi", "shared_wi") else 1
+            try_shard(ff_dim, "data", data_size)
+        elif fsdp:
+            d_dim = 1 if name in ("wi", "shared_wi") else 2
+            try_shard(d_dim, "data", data_size)
+    elif name == "r" and len(shape) == 3:          # sLSTM recurrent (nh,dh,4dh)
+        try_shard(2, "model", model_size)
+    elif name in _COLUMN and len(shape) >= 2:
+        try_shard(len(shape) - 1, "model", model_size)
+        if fsdp:
+            try_shard(len(shape) - 2, "data", data_size)
+    elif name in _ROW and len(shape) >= 2:
+        try_shard(len(shape) - 2, "model", model_size)
+        if fsdp:
+            try_shard(len(shape) - 1, "data", data_size)
+    elif name in _VEC_SHARD and len(shape) == 1:
+        try_shard(0, "model", model_size)
+    # _REPLICATE and anything unmatched: fully replicated
+
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def param_shardings(params_abstract, mesh: Mesh, *, fsdp: bool = False,
+                    serve2d: bool = False):
+    """NamedSharding pytree matching a params pytree."""
+    model_size = mesh.shape.get("model", 1)
+    data_size = mesh.shape.get("data", 1)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, model_size=model_size,
+                             data_size=data_size, fsdp=fsdp,
+                             serve2d=serve2d)),
+        params_abstract)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def cache_spec(path, leaf, *, model_size: int,
+               batch_axes: Tuple[str, ...]) -> P:
+    """Decode/prefill cache leaf spec.
+
+    KV caches shard heads over ``model`` when divisible, otherwise the
+    *sequence* dim shards over ``model`` (sequence-parallel decode
+    attention: softmax reductions lower to all-reduces — DESIGN.md §5).
+    Recurrent states shard their feature dim.
+    """
+    names = _path_names(path)
+    name = names[-1]
+    stacked = "body" in names
+    shape = leaf.shape[1:] if stacked else leaf.shape
+    ba = tuple(batch_axes) if batch_axes else None
+    spec: list = [None] * len(shape)
+    if len(shape) >= 1:
+        spec[0] = ba                               # batch dim
+    if name in ("k", "v", "ck", "cv") and len(shape) == 4:
+        b, s, kvh, hd = shape
+        if _div(kvh, model_size):
+            spec[2] = "model"
+        elif _div(s, model_size):
+            spec[1] = "model"
+    elif name in ("ckv", "krope") and len(shape) == 3:
+        if _div(shape[1], model_size):
+            spec[1] = "model"                      # seq-sharded latent
+    elif name in ("h", "c", "n", "m") and len(shape) == 2:
+        if _div(shape[1], model_size):
+            spec[1] = "model"
+    elif name == "conv" and len(shape) == 3:
+        if _div(shape[2], model_size):
+            spec[2] = "model"
+    elif name == "C" and len(shape) == 4:
+        if _div(shape[2], model_size):
+            spec[2] = "model"
+    elif name == "n" and len(shape) == 3:
+        if _div(shape[2], model_size):
+            spec[2] = "model"
+    elif name == "m" and len(shape) == 2:
+        pass
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def cache_shardings(cache_abstract, mesh: Mesh,
+                    batch_axes: Tuple[str, ...] = ("data",)):
+    model_size = mesh.shape.get("model", 1)
+    def leaf_spec(path, leaf):
+        sp = cache_spec(path, leaf, model_size=model_size,
+                        batch_axes=batch_axes)
+        return NamedSharding(mesh, sp)
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_abstract)
+
+
+def data_sharding(mesh: Mesh, batch_axes: Tuple[str, ...] = ("data",),
+                  extra_dims: int = 1):
+    """Sharding for (batch, ...) input arrays: batch over batch_axes."""
+    return NamedSharding(mesh, P(tuple(batch_axes), *([None] * extra_dims)))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (re-anchor GSPMD propagation at layer
+# boundaries — without these, sharding is lost through scan+remat and XLA
+# replicates the batch dim of attention scores / logits).
+# ---------------------------------------------------------------------------
+import contextlib as _contextlib
+
+_ACT_CTX: dict = {"batch_axes": None, "model_axis": None, "mesh": None,
+                  "opts": frozenset()}
+
+# §Perf optimization toggles (see EXPERIMENTS.md):
+#   "seqkv"  — prefill attention computes masked partial-softmax directly
+#              over the sequence-sharded KV cache (all-reduce of softmax
+#              stats) instead of letting GSPMD all-gather the cache per
+#              chunk.  Sequence-parallel attention.
+#   "attn2d" — attention q/k/v reshard batch over (data x model) when
+#              heads cannot shard over the model axis (qwen2's 14 heads):
+#              attention becomes pure 2D batch parallel.
+#   "seqact" — residual-stream activations shard their seq dim over the
+#              model axis between layers (Megatron-style sequence
+#              parallelism): remat carries shrink by the model-axis size.
+
+
+@_contextlib.contextmanager
+def activation_sharding(mesh: Mesh, batch_axes=("data",),
+                        model_axis: str = "model", opts=()):
+    """Enable with_sharding_constraint on activations while tracing."""
+    prev = dict(_ACT_CTX)
+    _ACT_CTX.update(mesh=mesh, batch_axes=tuple(batch_axes),
+                    model_axis=model_axis, opts=frozenset(opts))
+    try:
+        yield
+    finally:
+        _ACT_CTX.update(prev)
+
+
+def data_axis_size() -> int:
+    """Product of the active batch axes' sizes (1 outside a context)."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None:
+        return 1
+    total = 1
+    for ax in _ACT_CTX["batch_axes"] or ():
+        total *= mesh.shape.get(ax, 1)
+    return total
+
+
+def seq_constrain(x, seq_dim: int = 1):
+    """Pin a cache/score tensor's sequence dim to the model axis."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None or not hasattr(x, "ndim") or x.ndim <= seq_dim:
+        return x
+    ma = _ACT_CTX["model_axis"]
+    if x.shape[seq_dim] % mesh.shape.get(ma, 1) != 0:
+        return x
+    ba = _ACT_CTX["batch_axes"]
+    spec = [ba if ba else None] + [None] * (x.ndim - 1)
+    spec[seq_dim] = ma
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def opt_on(name: str) -> bool:
+    return _ACT_CTX["mesh"] is not None and name in _ACT_CTX["opts"]
+
+
+def batch2d_constrain(x):
+    """Shard dim0 over (batch_axes + model) — 2D batch-parallel attention
+    for head-unshardeable models ("attn2d")."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None or not hasattr(x, "ndim"):
+        return x
+    ba = _ACT_CTX["batch_axes"] or ()
+    ma = _ACT_CTX["model_axis"]
+    total = 1
+    for ax in tuple(ba) + (ma,):
+        total *= mesh.shape.get(ax, 1)
+    if x.shape[0] % total != 0:
+        return x
+    spec = [tuple(ba) + (ma,)] + [None] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def act_constrain(x, *, vocab_dim: bool = False):
+    """Constrain (batch, ..., [vocab]) activation: batch over batch_axes,
+    vocab (last dim) over the model axis when divisible."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None or not hasattr(x, "ndim") or x.ndim < 1:
+        return x
+    batch_axes = _ACT_CTX["batch_axes"]
+    spec = [batch_axes if batch_axes else None] + [None] * (x.ndim - 1)
+    if (not vocab_dim and opt_on("seqact") and x.ndim == 3):
+        ma = _ACT_CTX["model_axis"]
+        if x.shape[1] % mesh.shape.get(ma, 1) == 0:
+            spec[1] = ma                    # sequence parallelism
+    if vocab_dim:
+        ma = _ACT_CTX["model_axis"]
+        size = mesh.shape.get(ma, 1)
+        if x.shape[-1] % size == 0:
+            spec[-1] = ma
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def moe_constrain(x, expert_dim: Optional[int] = None,
+                  ff_dim: Optional[int] = None):
+    """With "moe2d" active (big-MoE serving), intermediates shard the
+    expert dim over ``model`` AND the expert-ff dim over ``data`` so the
+    einsums run directly on the 2D-sharded expert weights (partial-sum
+    all-reduces instead of weight gathers)."""
+    """Constrain a MoE intermediate: dim 0 (token groups) over the batch
+    axes; the expert dim over ``model`` when divisible, else the expert-ff
+    dim.  Without these, GSPMD replicates the (G,g,E,cap) dispatch tensors
+    — ~66 GB/chip at DeepSeek-V2 scale."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None or not hasattr(x, "ndim") or x.ndim < 2:
+        return x
+    batch_axes = _ACT_CTX["batch_axes"]
+    ma = _ACT_CTX["model_axis"]
+    size = mesh.shape.get(ma, 1)
+    if opt_on("moe2d") and expert_dim is not None:
+        spec = [None] * x.ndim
+        if x.shape[expert_dim] % size == 0:
+            spec[expert_dim] = ma
+        if ff_dim is not None:
+            dsz = 1
+            for ax in batch_axes or ():
+                dsz *= mesh.shape.get(ax, 1)
+            if x.shape[ff_dim] % dsz == 0 and batch_axes:
+                spec[ff_dim] = tuple(batch_axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+    spec = [batch_axes if batch_axes else None] + [None] * (x.ndim - 1)
+    if expert_dim is not None and x.shape[expert_dim] % size == 0:
+        spec[expert_dim] = ma
+    elif ff_dim is not None and x.shape[ff_dim] % size == 0:
+        spec[ff_dim] = ma
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

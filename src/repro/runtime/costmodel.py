@@ -1,0 +1,121 @@
+"""Analytic per-iteration latency model (roofline-shaped).
+
+Encodes the phase characteristics of Fig. 2:
+  * prefill — compute-bound: below the accelerator-saturate threshold the
+    iteration time is pinned by the weight-read floor (latency ~flat,
+    throughput rises); past it, time scales linearly with tokens
+    (throughput flat, latency grows) -> mixing prefills past saturation
+    slows everyone (§2.2.1).
+  * decode — memory-bound: iteration time = weight-read floor + KV bytes
+    streamed; throughput grows with batch until KV traffic saturates HBM
+    (§2.2.3's contention).
+
+Defaults approximate the paper's testbed (OPT-13B, TP=2 V100, saturate
+at 512 tokens); ``for_tpu_v5e`` gives the TPU target constants used by
+the roofline section.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float          # effective FLOP/s for the instance
+    hbm_bw: float              # bytes/s
+    saturate_tokens: int       # accelerator-saturate threshold (Fig 2)
+    dtype_bytes: int = 2
+
+    @classmethod
+    def v100_tp2(cls) -> "HardwareSpec":
+        return cls(name="2xV100-TP2", peak_flops=2 * 112e12,
+                   hbm_bw=2 * 900e9, saturate_tokens=512)
+
+    @classmethod
+    def tpu_v5e(cls, chips: int = 1) -> "HardwareSpec":
+        return cls(name=f"tpu-v5e-x{chips}", peak_flops=chips * 197e12,
+                   hbm_bw=chips * 819e9, saturate_tokens=512)
+
+
+class CostModel:
+    def __init__(self, cfg: ModelConfig, hw: HardwareSpec,
+                 n_params: int = 0, mfu: float = 0.45,
+                 mbu: float = 0.6):
+        self.cfg = cfg
+        self.hw = hw
+        self.n_params = n_params or _approx_params(cfg)
+        self.mfu = mfu      # achievable fraction of peak compute
+        self.mbu = mbu      # achievable fraction of peak bandwidth
+        self.weight_bytes = self.n_params * hw.dtype_bytes
+
+    # -- primitives ----------------------------------------------------
+    def _flops_per_token(self, ctx: int) -> float:
+        """Forward FLOPs/token: 2N matmul + attention KV dot terms."""
+        attn_layers = sum(1 for k in self.cfg.layer_kinds
+                          if k in ("attn", "local_attn", "cross_attn"))
+        attn = (4 * self.cfg.n_heads * self.cfg.resolved_head_dim
+                * ctx * attn_layers)
+        return 2.0 * self.n_params + attn
+
+    def _weight_floor(self) -> float:
+        return self.weight_bytes / (self.hw.hbm_bw * self.mbu)
+
+    # -- iteration costs -------------------------------------------------
+    def prefill_time(self, tokens: int, avg_ctx: int = 0) -> float:
+        """One prefill iteration over ``tokens`` total batch tokens."""
+        if tokens <= 0:
+            return 0.0
+        avg_ctx = avg_ctx or tokens
+        compute = (tokens * self._flops_per_token(avg_ctx // 2)
+                   / (self.hw.peak_flops * self.mfu))
+        return max(compute, self._weight_floor())
+
+    def decode_time(self, batch: int, ctx_sum: int) -> float:
+        """One decode iteration: batch tokens, sum of context lengths."""
+        if batch <= 0:
+            return 0.0
+        kv_bytes = self.cfg.kv_bytes_per_token(self.hw.dtype_bytes) * ctx_sum
+        mem = (self.weight_bytes + kv_bytes) / (self.hw.hbm_bw * self.mbu)
+        compute = (batch * self._flops_per_token(ctx_sum // max(1, batch))
+                   / (self.hw.peak_flops * self.mfu))
+        return max(mem, compute)
+
+    def mixed_time(self, prefill_tokens: int, decode_batch: int,
+                   decode_ctx_sum: int) -> float:
+        """Continuous-batching iteration mixing prefill + decode (§2.2.2).
+
+        Compute and memory demands add on shared hardware: decodes pay the
+        prefill's compute (their 5x slowdown), prefills pay the decodes'
+        KV traffic (their 2.5x slowdown) — the paper's interference, as a
+        roofline consequence rather than a fitted constant."""
+        if prefill_tokens <= 0:
+            return self.decode_time(decode_batch, decode_ctx_sum)
+        if decode_batch <= 0:
+            return self.prefill_time(prefill_tokens)
+        compute = ((prefill_tokens
+                    * self._flops_per_token(prefill_tokens // 2)
+                    + decode_batch * self._flops_per_token(
+                        decode_ctx_sum // max(1, decode_batch)))
+                   / (self.hw.peak_flops * self.mfu))
+        kv_bytes = self.cfg.kv_bytes_per_token(self.hw.dtype_bytes) \
+            * decode_ctx_sum
+        mem = (self.weight_bytes + kv_bytes) / (self.hw.hbm_bw * self.mbu)
+        return max(compute, mem)
+
+    def predictor_overhead(self, co_run: bool) -> float:
+        """Parallel-mode predictor slows main-LLM prefill ~10% under
+        stress (Fig. 17); sequential mode would add its full latency."""
+        return 1.10 if co_run else 1.0
+
+
+def _approx_params(cfg: ModelConfig) -> int:
+    try:
+        from repro.models.model import param_count
+        return param_count(cfg)
+    except Exception:
+        d = cfg.d_model
+        return cfg.n_layers * (4 * d * d + 3 * d * cfg.d_ff) \
+            + cfg.vocab_size * d

@@ -1,0 +1,76 @@
+"""Inference request model + lifecycle timestamps (TTFT/JCT accounting)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+import numpy as np
+
+
+class Phase(enum.Enum):
+    WAITING = "waiting"          # at global scheduler / prefill queue
+    PREFILL = "prefill"
+    TRANSFER = "transfer"        # KV cache in flight prefill -> decode
+    DECODE_QUEUED = "decode_queued"
+    DECODE = "decode"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: str
+    prompt_len: int
+    decode_len: int                      # ground-truth generated length
+    arrival: float = 0.0
+    sla_ms: float = 0.0
+    prompt_tokens: Optional[np.ndarray] = None
+    # --- scheduling state ---
+    phase: Phase = Phase.WAITING
+    predicted_bucket: int = -1           # length-range bucket (§3.3.2)
+    predicted_hi: int = 0                # upper bound of predicted range
+    predicted_lo: int = 0
+    prefilled: int = 0                   # tokens prefilled so far (chunked)
+    generated: int = 0
+    swapped: bool = False                # victim of a memory-pressure swap
+    # --- timestamps (seconds) ---
+    t_prefill_start: float = -1.0
+    t_first_token: float = -1.0          # == prefill done (TTFT)
+    t_transfer_done: float = -1.0
+    t_decode_start: float = -1.0
+    t_finish: float = -1.0
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.arrival
+
+    @property
+    def jct(self) -> float:
+        return self.t_finish - self.arrival
+
+    def is_heavy_prefill(self, thresh: int = 512) -> bool:
+        return self.prompt_len > thresh
+
+    def is_heavy_decode(self, thresh: int = 128) -> bool:
+        """Uses the *predicted* range when available (the scheduler never
+        sees ground truth), else the true length (oracle mode)."""
+        if self.predicted_hi > 0:
+            return self.predicted_hi > thresh
+        return self.decode_len > thresh
+
+
+def summarize(reqs: List[Request]) -> dict:
+    done = [r for r in reqs if r.phase == Phase.FINISHED]
+    if not done:
+        return {"n": 0}
+    ttfts = np.array([r.ttft for r in done])
+    jcts = np.array([r.jct for r in done])
+    return {
+        "n": len(done),
+        "avg_ttft": float(ttfts.mean()),
+        "p90_ttft": float(np.percentile(ttfts, 90)),
+        "avg_jct": float(jcts.mean()),
+        "p90_jct": float(np.percentile(jcts, 90)),
+        "makespan": float(max(r.t_finish for r in done)
+                          - min(r.arrival for r in done)),
+    }

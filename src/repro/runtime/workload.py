@@ -1,0 +1,68 @@
+"""Mixed downstream-workload generator (paper Fig. 1, §5.1).
+
+Synthesizes ShareGPT-like request mixes offline (no internet): log-normal
+prompt/decode length distributions calibrated to the paper's medians —
+ShareGPT short-prompt median 18, answer median 128, accelerator-saturate
+threshold 512 — for the five workload classes LPLD/LPHD/HPLD/HPHD/Mixed.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.runtime.request import Request
+
+HEAVY_PREFILL_THRESH = 512       # tokens (§5.1)
+HEAVY_DECODE_THRESH = 128        # ShareGPT answer median (§5.1)
+
+# (prompt_median, prompt_sigma, decode_median, decode_sigma)
+_CLASSES = {
+    "LPLD": (18, 0.8, 40, 0.7),       # chat
+    "LPHD": (18, 0.8, 420, 0.6),      # content creation
+    "HPLD": (1100, 0.5, 40, 0.7),     # summarization / prompt engineering
+    "HPHD": (1100, 0.5, 420, 0.6),
+}
+_MIX_WEIGHTS = {"LPLD": 0.45, "LPHD": 0.2, "HPLD": 0.2, "HPHD": 0.15}
+
+
+def _lognormal(rng, median, sigma, size):
+    return np.maximum(1, rng.lognormal(np.log(median), sigma,
+                                       size).astype(int))
+
+
+def generate(workload: str, n: int, *, seed: int = 0,
+             arrival_rate: Optional[float] = None,
+             max_prompt: int = 2048, max_decode: int = 2048,
+             vocab_size: int = 0) -> List[Request]:
+    """workload in {LPLD, LPHD, HPLD, HPHD, Mixed}. ``arrival_rate`` in
+    req/s (None = all arrive at t=0, the paper's batch-of-128 setup)."""
+    rng = np.random.default_rng(seed)
+    if workload == "Mixed":
+        names = list(_MIX_WEIGHTS)
+        picks = rng.choice(len(names), size=n,
+                           p=[_MIX_WEIGHTS[k] for k in names])
+        classes = [names[i] for i in picks]
+    else:
+        classes = [workload] * n
+
+    reqs = []
+    t = 0.0
+    for i, cls in enumerate(classes):
+        pm, ps, dm, ds = _CLASSES[cls]
+        plen = int(min(_lognormal(rng, pm, ps, 1)[0], max_prompt))
+        dlen = int(min(_lognormal(rng, dm, ds, 1)[0], max_decode))
+        if arrival_rate:
+            t += rng.exponential(1.0 / arrival_rate)
+        toks = (rng.integers(1, vocab_size, size=plen).astype(np.int32)
+                if vocab_size else None)
+        reqs.append(Request(rid=f"r{i:05d}", prompt_len=plen,
+                            decode_len=dlen, arrival=t,
+                            prompt_tokens=toks))
+    return reqs
+
+
+def length_histogram(reqs: List[Request], granularity: int = 200):
+    """Bucketed decode-length histogram — predictor training labels."""
+    buckets = [r.decode_len // granularity for r in reqs]
+    return np.bincount(buckets)

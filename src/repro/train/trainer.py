@@ -1,0 +1,108 @@
+"""Training substrate: loss, train_step factory (LM + classifier).
+
+``make_train_step`` returns a pure function ready for jax.jit with
+pjit-style in/out shardings (launch/dryrun.py supplies them); it is also
+used directly on CPU for the ~100M-model training example and the
+length-predictor fine-tuning (paper §3.3.2 / Fig. 8).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, enc_embeds=None):
+    """Next-token cross entropy. labels = tokens shifted by caller; -100
+    entries are masked."""
+    logits, aux = M.forward_train(params, cfg, tokens, enc_embeds=enc_embeds)
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_safe[..., None],
+                               axis=-1)[..., 0]
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux, loss
+
+
+def cls_loss(params, cfg: ModelConfig, tokens, lengths, labels):
+    logits = M.classify(params, cfg, tokens, lengths).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    acc = (jnp.argmax(logits, -1) == labels).astype(jnp.float32).mean()
+    return nll.mean(), acc
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[opt.AdamWConfig]
+                    = None, has_encoder: bool = False,
+                    microbatch: int = 1):
+    """``microbatch`` > 1: gradient accumulation over batch slices via
+    lax.scan — activation memory scales 1/microbatch (the §Perf "mbN"
+    knob for models whose train step overflows HBM)."""
+    opt_cfg = opt_cfg or opt.AdamWConfig()
+
+    def grads_of(params, tokens, labels, enc_embeds=None):
+        if microbatch <= 1:
+            (_, loss), grads = jax.value_and_grad(
+                lambda p: lm_loss(p, cfg, tokens, labels, enc_embeds),
+                has_aux=True)(params)
+            return grads, loss
+        b = tokens.shape[0]
+        assert b % microbatch == 0, (b, microbatch)
+        mb = b // microbatch
+
+        def one(carry, xs):
+            g_acc, l_acc = carry
+            t, l = xs[0], xs[1]
+            e = xs[2] if enc_embeds is not None else None
+            (_, loss), g = jax.value_and_grad(
+                lambda p: lm_loss(p, cfg, t, l, e), has_aux=True)(params)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        xs = [tokens.reshape(microbatch, mb, *tokens.shape[1:]),
+              labels.reshape(microbatch, mb, *labels.shape[1:])]
+        if enc_embeds is not None:
+            xs.append(enc_embeds.reshape(microbatch, mb,
+                                         *enc_embeds.shape[1:]))
+        (g_acc, l_acc), _ = jax.lax.scan(one, (g0, jnp.zeros(())),
+                                         tuple(xs))
+        grads = jax.tree_util.tree_map(lambda g: g / microbatch, g_acc)
+        return grads, l_acc / microbatch
+
+    if has_encoder:
+        def train_step(params, opt_state, tokens, labels, enc_embeds):
+            grads, loss = grads_of(params, tokens, labels, enc_embeds)
+            params, opt_state = opt.update(opt_cfg, grads, opt_state,
+                                           params)
+            return params, opt_state, loss
+    else:
+        def train_step(params, opt_state, tokens, labels):
+            grads, loss = grads_of(params, tokens, labels)
+            params, opt_state = opt.update(opt_cfg, grads, opt_state,
+                                           params)
+            return params, opt_state, loss
+    return train_step
+
+
+def make_cls_train_step(cfg: ModelConfig,
+                        opt_cfg: Optional[opt.AdamWConfig] = None):
+    opt_cfg = opt_cfg or opt.AdamWConfig(lr=1e-4, weight_decay=0.01)
+
+    def train_step(params, opt_state, tokens, lengths, labels):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: cls_loss(p, cfg, tokens, lengths, labels),
+            has_aux=True)(params)
+        params, opt_state = opt.update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, loss, acc
+    return train_step

@@ -1,0 +1,71 @@
+"""Property tests for the paper's chunked prefill (core/chunking.py)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import chunking
+
+
+req_lists = st.lists(
+    st.tuples(st.integers(0, 10**6), st.integers(1, 3000)),
+    min_size=1, max_size=40).map(
+        lambda l: [(f"r{i}_{rid}", ln) for i, (rid, ln) in enumerate(l)])
+
+
+@given(req_lists, st.sampled_from([16, 64, 512]))
+@settings(max_examples=200, deadline=None)
+def test_token_conservation(reqs, chunk_size):
+    chunks = chunking.partition(reqs, chunk_size)
+    assert sum(c.tokens for c in chunks) == sum(ln for _, ln in reqs)
+
+
+@given(req_lists, st.sampled_from([16, 64, 512]))
+@settings(max_examples=200, deadline=None)
+def test_fixed_size_and_padding(reqs, chunk_size):
+    chunks = chunking.partition(reqs, chunk_size)
+    for c in chunks[:-1]:
+        assert c.tokens == chunk_size and c.pad == 0
+    last = chunks[-1]
+    assert last.tokens + last.pad == chunk_size
+    assert 0 <= last.pad < chunk_size
+
+
+@given(req_lists, st.sampled_from([16, 64, 512]))
+@settings(max_examples=200, deadline=None)
+def test_order_preservation_and_contiguity(reqs, chunk_size):
+    chunks = chunking.partition(reqs, chunk_size)
+    segs = [s for c in chunks for s in c.segments]
+    # request first-appearance order matches scheduling order
+    seen = []
+    for s in segs:
+        if s.rid not in seen:
+            seen.append(s.rid)
+    assert seen == [rid for rid, _ in reqs]
+    # each request's slices are contiguous, in order, and complete
+    per = {}
+    for s in segs:
+        per.setdefault(s.rid, []).append(s)
+    lens = dict(reqs)
+    for rid, ss in per.items():
+        pos = 0
+        for s in ss:
+            assert s.req_start == pos
+            pos += s.length
+        assert pos == lens[rid]
+
+
+@given(req_lists, st.sampled_from([16, 64, 512]))
+@settings(max_examples=100, deadline=None)
+def test_chunk_interior_offsets(reqs, chunk_size):
+    for c in chunking.partition(reqs, chunk_size):
+        pos = 0
+        for s in c.segments:
+            assert s.chunk_start == pos
+            pos += s.length
+        assert pos + c.pad == chunk_size or c.pad == 0
+
+
+def test_chunks_for_matches_partition():
+    for plen in [1, 511, 512, 513, 5000]:
+        chunks = chunking.partition([("r", plen)], 512)
+        assert len(chunks) == chunking.chunks_for(plen, 512)
+        assert chunking.padded_len(plen, 512) == len(chunks) * 512

@@ -1,0 +1,113 @@
+"""Model-substrate correctness: chunked-prefill equivalence, decode-vs-
+train consistency, cache insert/select, classifier head, MLA/recurrent
+state handling."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import frontends as F
+from repro.models import model as M
+
+F32 = lambda a: dataclasses.replace(get_smoke_config(a), dtype="float32")
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "recurrentgemma_9b",
+                                  "xlstm_1_3b", "deepseek_v2_236b",
+                                  "whisper_tiny", "mistral_nemo_12b"])
+def test_chunked_prefill_equals_single(arch):
+    cfg = F32(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    enc = F.fake_frontend(cfg, 2)
+    lg, _ = M.prefill(params, cfg, toks, M.init_cache(cfg, 2, 32),
+                      enc_embeds=enc)
+    lg2, _ = M.prefill_chunked(params, cfg, toks, M.init_cache(cfg, 2, 32),
+                               chunk_size=8, enc_embeds=enc)
+    assert float(jnp.abs(lg - lg2).max()) < 1e-3
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "recurrentgemma_9b",
+                                  "xlstm_1_3b", "deepseek_v2_236b",
+                                  "granite_moe_3b_a800m"])
+def test_decode_matches_train_forward(arch):
+    """decode_step at position t == forward_train logits at position t."""
+    cfg = F32(arch)
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 17), 0,
+                              cfg.vocab_size)
+    full, _ = M.forward_train(params, cfg, toks)
+    cache = M.init_cache(cfg, 2, 32)
+    _, cache = M.prefill(params, cfg, toks[:, :16], cache)
+    dl, _ = M.decode_step(params, cfg, toks[:, 16:17], cache,
+                          jnp.array([16, 16], jnp.int32))
+    err = float(jnp.abs(full[:, 16] - dl[:, 0]).max())
+    assert err < (2e-2 if arch == "granite_moe_3b_a800m" else 1e-3), err
+    # (MoE tolerance: capacity-based dispatch differs between the batched
+    # train pass and the single-token decode pass)
+
+
+def test_sliding_window_decode_ring_cache():
+    cfg = dataclasses.replace(F32("mistral_nemo_12b"), sliding_window=8)
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    # decode 20 tokens with ring cache size 8 vs full cache with window
+    ring = M.init_cache(cfg, 1, 8, ring=True)
+    full = M.init_cache(cfg, 1, 64)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, 24), 0,
+                              cfg.vocab_size)
+    for t in range(20):
+        pos = jnp.array([t], jnp.int32)
+        lr, ring = M.decode_step(params, cfg, toks[:, t:t + 1], ring, pos)
+        lf, full = M.decode_step(params, cfg, toks[:, t:t + 1], full, pos)
+        assert float(jnp.abs(lr - lf).max()) < 1e-3, t
+
+
+def test_cache_insert_select_roundtrip():
+    cfg = F32("recurrentgemma_9b")
+    params = M.init_params(jax.random.PRNGKey(6), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(7), (1, 8), 0,
+                              cfg.vocab_size)
+    single = M.init_cache(cfg, 1, 16)
+    _, single = M.prefill(params, cfg, toks, single)
+    batch = M.init_cache(cfg, 4, 16)
+    batch = M.cache_insert(batch, single, 2)
+    back = M.cache_select(batch, 2)
+    for a, b in zip(jax.tree_util.tree_leaves(single),
+                    jax.tree_util.tree_leaves(back)):
+        assert float(jnp.abs(a.astype(jnp.float32)
+                             - b.astype(jnp.float32)).max()) == 0
+
+
+def test_classifier_head():
+    cfg = F32("opt_125m_cls")
+    assert cfg.n_classes == 16
+    params = M.init_params(jax.random.PRNGKey(8), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(9), (3, 12), 0,
+                              cfg.vocab_size)
+    lens = jnp.array([12, 5, 1], jnp.int32)
+    logits = M.classify(params, cfg, toks, lens)
+    assert logits.shape == (3, 16)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_mla_cache_is_compressed():
+    cfg = F32("deepseek_v2_236b")
+    cache = M.init_cache(cfg, 1, 32)
+    leaves = {p for p, _ in jax.tree_util.tree_flatten_with_path(cache)[0]
+              for p in [str(p)]}
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    names = {"".join(str(e) for e in path) for path, _ in flat}
+    assert any("ckv" in n for n in names)
+    assert not any("'k'" in n for n in names)   # no full K/V cached
+
+
+def test_recurrent_state_constant_size():
+    cfg = F32("xlstm_1_3b")
+    c1 = M.init_cache(cfg, 1, 16)
+    c2 = M.init_cache(cfg, 1, 4096)
+    b1 = sum(l.size for l in jax.tree_util.tree_leaves(c1))
+    b2 = sum(l.size for l in jax.tree_util.tree_leaves(c2))
+    assert b1 == b2   # attention-free: state does not grow with seq

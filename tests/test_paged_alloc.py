@@ -1,0 +1,72 @@
+"""Paged-KV allocator invariants (hypothesis-driven random workload)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.kvcache.paged import OutOfPages, PagedAllocator, PagePool
+
+
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "append", "free"]),
+                          st.integers(0, 9), st.integers(1, 200)),
+                max_size=200))
+@settings(max_examples=200, deadline=None)
+def test_allocator_invariants(ops):
+    a = PagedAllocator(n_pages=32, page_size=16)
+    live = set()
+    for op, ridx, toks in ops:
+        rid = f"r{ridx}"
+        try:
+            if op == "alloc" and rid not in live:
+                a.alloc(rid, toks)
+                live.add(rid)
+            elif op == "append" and rid in live:
+                a.append_token(rid)
+            elif op == "free" and rid in live:
+                a.free(rid)
+                live.discard(rid)
+        except OutOfPages:
+            pass
+        # invariants
+        assert a.used_pages + a.free_pages == a.n_pages
+        held = []
+        for r in live:
+            pages = a.table(r)
+            assert len(set(pages)) == len(pages)       # no dup inside req
+            assert len(pages) >= a.pages_for(a.length(r)) or a.length(r) == 0
+            held.extend(pages)
+        assert len(set(held)) == len(held)             # no double alloc
+        assert len(held) == a.used_pages
+
+
+def test_free_pages_are_reusable():
+    a = PagedAllocator(n_pages=4, page_size=16)
+    a.alloc("a", 64)                 # all 4 pages
+    with pytest.raises(OutOfPages):
+        a.alloc("b", 1)
+    a.free("a")
+    a.alloc("b", 64)                 # reusable after free
+    assert a.used_pages == 4
+
+
+def test_append_grows_page_at_boundary():
+    a = PagedAllocator(n_pages=8, page_size=4)
+    a.alloc("a", 4)                  # exactly one full page
+    assert len(a.table("a")) == 1
+    a.append_token("a")              # crosses boundary -> second page
+    assert len(a.table("a")) == 2
+    assert a.length("a") == 5
+
+
+def test_page_pool_roundtrip():
+    import jax.numpy as jnp
+    import numpy as np
+    pool = PagePool.create(n_layers=2, n_pages=8, page_size=4, kvh=2, hd=8,
+                           dtype=jnp.float32)
+    k = jnp.arange(8 * 2 * 8, dtype=jnp.float32).reshape(8, 2, 8)
+    pool = pool.write_chunk(1, np.array([3, 5]), k, k * 2)
+    kl, vl = pool.layer(1)
+    assert float(abs(kl[3].reshape(-1) - k[:4].reshape(-1)).max()) == 0
+    assert float(abs(vl[5].reshape(-1) - 2 * k[4:].reshape(-1)).max()) == 0
+    pool = pool.write_token(0, 2, 1, k[0], k[1])
+    kl0, vl0 = pool.layer(0)
+    assert float(abs(kl0[2, 1] - k[0]).max()) == 0

@@ -1,0 +1,90 @@
+"""Sharding-rule unit tests: divisibility fallbacks, FSDP vs serve2d,
+cache head-vs-seq sharding, stacked (scanned) leaf handling."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding as S
+
+
+class _Leaf:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _key(name):
+    return (jax.tree_util.DictKey(name),)
+
+
+def _body_key(name):
+    return (jax.tree_util.DictKey("body"), jax.tree_util.DictKey(name))
+
+
+def test_column_row_specs():
+    assert S.param_spec(_key("wq"), _Leaf((896, 896)),
+                        model_size=16) == P(None, "model")
+    assert S.param_spec(_key("wo"), _Leaf((896, 896)),
+                        model_size=16) == P("model", None)
+
+
+def test_divisibility_fallback_replicates():
+    # qwen2 wk: out dim 2 kv heads x 64 = 128 / 16 = 8 OK; but 14*... a
+    # dim not divisible by 16 must stay None
+    assert S.param_spec(_key("wq"), _Leaf((896, 14 * 64)),
+                        model_size=32) == P(None, "model")  # 896/32 no, 896? 896%32=0
+    assert S.param_spec(_key("wq"), _Leaf((897, 13)),
+                        model_size=16) == P(None, None)
+
+
+def test_stacked_body_leaves_get_leading_none():
+    sp = S.param_spec(_body_key("wq"), _Leaf((24, 896, 896)), model_size=16)
+    assert sp == P(None, None, "model")
+
+
+def test_expert_weights_expert_parallel_vs_ff_fallback():
+    # 160 experts / 16 -> expert parallel
+    sp = S.param_spec(_key("wi"), _Leaf((160, 5120, 3072)), model_size=16)
+    assert sp == P("model", None, None)
+    # 40 experts not divisible -> ff tensor parallel
+    sp = S.param_spec(_key("wi"), _Leaf((40, 1536, 1024)), model_size=16)
+    assert sp == P(None, None, "model")
+
+
+def test_serve2d_vs_fsdp_expert_sharding():
+    sp = S.param_spec(_key("wi"), _Leaf((160, 5120, 3072)), model_size=16,
+                      data_size=16, serve2d=True)
+    assert sp == P("model", None, "data")     # 2D *tensor* parallel
+    sp = S.param_spec(_key("wi"), _Leaf((160, 5120, 3072)), model_size=16,
+                      data_size=16, fsdp=True)
+    assert sp == P("model", "data", None)     # gather-style FSDP
+
+
+def test_cache_heads_vs_seq_sharding():
+    # kv heads divisible -> heads shard
+    sp = S.cache_spec(_key("k"), _Leaf((128, 32768, 16, 128)),
+                      model_size=16, batch_axes=("data",))
+    assert sp == P(("data",), None, "model", None)
+    # kv heads NOT divisible -> sequence-parallel KV
+    sp = S.cache_spec(_key("k"), _Leaf((128, 32768, 8, 128)),
+                      model_size=16, batch_axes=("data",))
+    assert sp == P(("data",), "model", None, None)
+    # MLA latent: seq sharded
+    sp = S.cache_spec(_key("ckv"), _Leaf((128, 32768, 512)),
+                      model_size=16, batch_axes=("data",))
+    assert sp == P(("data",), "model", None)
+
+
+def test_recurrent_state_feature_sharding():
+    sp = S.cache_spec(_key("h"), _Leaf((32, 4096)), model_size=16,
+                      batch_axes=("data",))
+    assert sp == P(("data",), "model")
+    sp = S.cache_spec(_key("C"), _Leaf((32, 4, 1024, 1024)), model_size=16,
+                      batch_axes=("data",))
+    assert sp == P(("data",), None, "model", None)
+
+
+def test_norms_replicated():
+    for n in ("norm1", "final_norm", "a_param", "router"):
+        sp = S.param_spec(_key(n), _Leaf((4096,)), model_size=16)
+        assert all(ax is None for ax in sp), sp   # fully replicated

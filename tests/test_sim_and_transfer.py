@@ -1,0 +1,145 @@
+"""Simulator + KV-transfer + predictor + flip + optimizer unit tests."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.kv_transfer import (NetworkStack, TS_NVLINK, TS_ROCE,
+                                    TS_SOCKET, kv_bytes)
+from repro.core.predictor import OraclePredictor, bucket_of, bucket_range
+from repro.core.sched.flip import FlipMachine, FlipState, Role
+from repro.runtime.costmodel import CostModel, HardwareSpec
+from repro.runtime.simulator import CoupledSimulator, DisaggSimulator
+from repro.runtime.workload import generate
+
+
+@pytest.fixture(scope="module")
+def opt13b():
+    cfg = get_config("opt_13b")
+    return cfg, CostModel(cfg, HardwareSpec.v100_tp2(),
+                          n_params=13_000_000_000)
+
+
+def test_workload_classes_have_expected_shape():
+    lp = generate("LPLD", 200, seed=0)
+    hp = generate("HPHD", 200, seed=0)
+    assert np.median([r.prompt_len for r in lp]) < 64
+    assert np.median([r.prompt_len for r in hp]) > 512
+    assert np.median([r.decode_len for r in hp]) > 128
+
+
+def test_simulators_complete_all_requests(opt13b):
+    cfg, cost = opt13b
+    reqs = generate("Mixed", 64, seed=1)
+    ra = CoupledSimulator(cfg, cost, n_instances=2).run(copy.deepcopy(reqs))
+    rb = DisaggSimulator(cfg, cost, n_prefill=1, n_decode=1).run(
+        copy.deepcopy(reqs))
+    assert ra.metrics["n"] == 64
+    assert rb.metrics["n"] == 64
+    assert rb.resource_time > 0
+
+
+def test_disagg_beats_coupled_on_lphd_ttft(opt13b):
+    """The paper's headline (Fig 12): LPHD TTFT improves dramatically."""
+    cfg, cost = opt13b
+    reqs = generate("LPHD", 128, seed=0)
+    ra = CoupledSimulator(cfg, cost, n_instances=2, prefill_batch=16,
+                          max_batch=16).run(copy.deepcopy(reqs))
+    rb = DisaggSimulator(cfg, cost, n_prefill=1, n_decode=1, max_batch=64,
+                         enable_flip=True, flip_idle_s=1.0).run(
+        copy.deepcopy(reqs))
+    assert rb.metrics["avg_ttft"] < 0.2 * ra.metrics["avg_ttft"]
+    assert rb.perf_per_dollar > ra.perf_per_dollar
+
+
+def test_greedy_policy_swaps_reserve_does_not(opt13b):
+    cfg, cost = opt13b
+    reqs = generate("LPHD", 96, seed=3, max_decode=1500)
+    kw = dict(n_prefill=1, n_decode=1, n_pages=512, page_size=16,
+              max_batch=64)
+    rg = DisaggSimulator(cfg, cost, decode_policy="greedy", **kw).run(
+        copy.deepcopy(reqs))
+    rr = DisaggSimulator(cfg, cost, decode_policy="reserve-static",
+                         predictor=OraclePredictor(1.0), **kw).run(
+        copy.deepcopy(reqs))
+    assert rg.swap_events > 0
+    assert rr.swap_events == 0
+    assert rr.metrics["n"] == rg.metrics["n"] == 96
+
+
+# -- kv transfer -------------------------------------------------------------
+def test_kv_bytes_mla_much_smaller_than_gqa():
+    dsv2 = get_config("deepseek_v2_236b")
+    nemo = get_config("mistral_nemo_12b")
+    per_dsv2 = dsv2.kv_bytes_per_token()
+    per_gqa_equiv = 2 * dsv2.n_heads * 128 * 2 * len(dsv2.layer_kinds)
+    assert per_dsv2 < per_gqa_equiv / 10   # the MLA ~14x compression
+    assert nemo.kv_bytes_per_token() > 0
+
+
+def test_transfer_time_ordering():
+    cfg = get_config("opt_13b")
+    b = kv_bytes(cfg, 512)
+    t_nv = NetworkStack(TS_NVLINK).transfer_time(b)
+    t_roce = NetworkStack(TS_ROCE).transfer_time(b)
+    t_sock = NetworkStack(TS_SOCKET).transfer_time(b)
+    assert t_nv < t_roce < t_sock
+
+
+def test_chunk_level_transfer_hides_latency():
+    cfg = get_config("opt_13b")
+    req_level = NetworkStack(TS_ROCE, granularity="request")
+    chunk_level = NetworkStack(TS_ROCE, granularity="chunk")
+    t_req = req_level.send_kv(cfg, 4096, n_chunks=8)
+    t_chunk = chunk_level.send_kv(cfg, 4096, n_chunks=8)
+    assert t_chunk < t_req    # only the last chunk is on the critical path
+    assert req_level.bytes_sent == chunk_level.bytes_sent
+
+
+def test_recurrent_state_transfer_is_constant():
+    cfg = get_config("xlstm_1_3b")
+    assert kv_bytes(cfg, 100) == kv_bytes(cfg, 100_000)
+
+
+# -- predictor ---------------------------------------------------------------
+def test_bucketing_roundtrip():
+    for ln in [0, 1, 199, 200, 399, 2000]:
+        b = bucket_of(ln, 200)
+        lo, hi = bucket_range(b, 200)
+        assert lo <= ln < hi
+
+
+def test_oracle_predictor_accuracy_calibration():
+    pred = OraclePredictor(accuracy=0.749, seed=0)
+    hits = sum(pred.predict(None, 300) == 1 for _ in range(2000))
+    assert 0.70 < hits / 2000 < 0.80
+
+
+# -- flip --------------------------------------------------------------------
+def test_flip_state_machine():
+    m = FlipMachine(Role.PREFILL)
+    assert m.accepting
+    m.begin_flip()
+    assert not m.accepting
+    m.drained(now=1.0)
+    assert m.state == FlipState.FLIPPING
+    assert not m.maybe_complete(1.001)   # 5-7ms flip latency
+    assert m.maybe_complete(1.01)
+    assert m.role == Role.DECODE and m.flips == 1
+
+
+# -- optimizer ---------------------------------------------------------------
+def test_adamw_converges_on_quadratic():
+    import jax
+    import jax.numpy as jnp
+    from repro.train import optimizer as opt
+    cfg = opt.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                          total_steps=200)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum((p["w"] - 1.0) ** 2)
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(cfg, g, state, params)
+    assert float(loss(params)) < 1e-2
