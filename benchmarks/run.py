@@ -11,7 +11,7 @@ from benchmarks import (fig02_phase_characteristics, fig03_interference_pp,
                         fig04_interference_pd, fig05_interference_dd,
                         fig11_15_end_to_end, fig16_prefill_sched,
                         fig17_predictor_overhead, fig18_decode_sched,
-                        fig19_load_balance, flip_latency,
+                        fig19_load_balance, flip_latency, paged_serving,
                         predictor_accuracy, roofline_report)
 
 ALL = [
@@ -27,6 +27,7 @@ ALL = [
     ("predictor_accuracy", predictor_accuracy.run),
     ("flip_latency", flip_latency.run),
     ("roofline", roofline_report.run),
+    ("paged_serving", paged_serving.run),
 ]
 
 

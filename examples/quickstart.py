@@ -45,7 +45,7 @@ def main():
             print(f"  prefilled {kv.req.rid:8s} prompt={kv.req.prompt_len:3d} "
                   f"pred_bucket={kv.req.predicted_bucket} "
                   f"transfer={kv.transfer_delay_s*1e6:.0f}us")
-            decode.receive(kv.req, kv.cache, kv.first_token)
+            decode.receive(kv)
         decode.admit(t)
         for fin in decode.step(t):          # continuous-batching iteration
             outputs[fin.req.rid] = fin.tokens

@@ -5,6 +5,17 @@ Slot-based continuous batching: a fixed-capacity slot batch (XLA-friendly
 static shapes) with a validity mask; the admission policy (greedy /
 reserve-static / reserve-dynamic) decides which queued requests join each
 iteration against the paged-KV allocator.
+
+Execution backends:
+  * ``paged`` (default for pure-attention archs) — K/V lives in a shared
+    device ``PagePool``; admission INSTALLS the received page contents
+    and a block-table row (no dense ``cache_insert`` copy), every
+    iteration runs the full slot batch through the Pallas paged-decode
+    kernel, block tables grow page-at-a-time via the allocator's
+    ``append_token``, and argmax stays on device (one int per slot
+    crosses to host).
+  * ``dense`` — legacy (max_slots, max_seq) dense cache; retained for
+    recurrent / MLA / windowed architectures.
 """
 from __future__ import annotations
 
@@ -16,8 +27,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.decode_types import FinishedRequest
+from repro.core.prefill_engine import (PrefilledKV, make_page_pool,
+                                       resolve_backend)
 from repro.core.sched.decode_scheduler import DecodeScheduler
-from repro.kvcache.paged import PagedAllocator
+from repro.kvcache.paged import PagedAllocator, PagePool
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.runtime.request import Phase, Request
@@ -34,7 +47,8 @@ class DecodeEngine:
     def __init__(self, iid: str, cfg: ModelConfig, params, *,
                  max_slots: int = 8, max_seq: int = 512,
                  policy: str = "reserve-dynamic",
-                 n_pages: int = 512, page_size: int = 16):
+                 n_pages: int = 512, page_size: int = 16,
+                 backend: str = "auto"):
         self.iid = iid
         self.cfg = cfg
         self.params = params
@@ -43,23 +57,43 @@ class DecodeEngine:
         self.alloc = PagedAllocator(n_pages=n_pages, page_size=page_size)
         self.scheduler = DecodeScheduler(self.alloc, policy=policy,
                                          max_batch=max_slots)
-        self.cache = M.init_cache(cfg, max_slots, max_seq)
+        self.backend = resolve_backend(cfg, backend)
+        self.page_size = page_size
         self.slots: Dict[int, SlotState] = {}
-        self._pending_kv: Dict[str, object] = {}
-        self._pending_tok: Dict[str, int] = {}
+        self._pending: Dict[str, PrefilledKV] = {}
         self.iterations = 0
 
-        def _decode(params, toks, cache, pos):
-            return M.decode_step(params, cfg, toks, cache, pos)
-        self._decode = jax.jit(_decode)
+        if self.backend == "paged":
+            # the allocator's block tables ARE the physical mapping
+            self.pool, self._trash = make_page_pool(cfg, n_pages,
+                                                    page_size)
+            self._bt_width = self.alloc.pages_for(max_seq)
+
+            def _decode_paged(params, toks, pos, pages, offs, bt, lens,
+                              kp, vp):
+                return M.decode_step_paged(params, cfg, toks, pos, pages,
+                                           offs, bt, lens, kp, vp)
+            # donate the pools: in-place pool update per iteration
+            # instead of a full KV-pool copy (no-op on CPU)
+            self._decode_paged = jax.jit(_decode_paged,
+                                         donate_argnums=(7, 8))
+        else:
+            self.cache = M.init_cache(cfg, max_slots, max_seq)
+
+            def _decode(params, toks, cache, pos):
+                return M.decode_step_greedy(params, cfg, toks, cache, pos)
+            self._decode = jax.jit(_decode)
 
     # ------------------------------------------------------------------
-    def receive(self, req: Request, kv_cache, first_token: int) -> None:
+    def receive(self, pk: PrefilledKV) -> None:
         """Receiver module: prefilled KV has arrived (post transfer wait)."""
-        req.phase = Phase.DECODE_QUEUED
-        self._pending_kv[req.rid] = kv_cache
-        self._pending_tok[req.rid] = first_token
-        self.scheduler.enqueue(req)
+        # block-table rows are sized for max_seq; the finish condition in
+        # step() keeps every admitted sequence inside that bound
+        assert pk.req.prompt_len < self.max_seq, \
+            f"{pk.req.rid}: prompt {pk.req.prompt_len} >= max_seq"
+        pk.req.phase = Phase.DECODE_QUEUED
+        self._pending[pk.req.rid] = pk
+        self.scheduler.enqueue(pk.req)
 
     def _free_slot(self) -> Optional[int]:
         for s in range(self.max_slots):
@@ -69,17 +103,37 @@ class DecodeEngine:
 
     def admit(self, now: float) -> List[Request]:
         admitted = self.scheduler.admit()
+        pages: List[int] = []
+        payload_k, payload_v = [], []
         for req in admitted:
             slot = self._free_slot()
             assert slot is not None, "scheduler admitted past slot capacity"
-            kv = self._pending_kv.pop(req.rid)
-            first = self._pending_tok.pop(req.rid)
-            self.cache = M.cache_insert(self.cache, kv, slot)
-            self.slots[slot] = SlotState(req=req, last_token=first,
-                                         tokens=[first])
+            pk = self._pending.pop(req.rid)
+            if self.backend == "paged":
+                # stage the received pages for the pages the scheduler's
+                # admission just allocated; the block-table row is the
+                # allocator's table — no dense cache_insert copy
+                table = self.alloc.table(req.rid)
+                assert pk.pages_k is not None and \
+                    pk.pages_k.shape[1] == len(table), \
+                    "paged decode engine needs a page-granular payload " \
+                    "from a paged prefill engine with the same page_size"
+                pages.extend(table)
+                payload_k.append(pk.pages_k)
+                payload_v.append(pk.pages_v)
+            else:
+                self.cache = M.cache_insert(self.cache, pk.cache, slot)
+            self.slots[slot] = SlotState(req=req,
+                                         last_token=pk.first_token,
+                                         tokens=[pk.first_token])
             req.phase = Phase.DECODE
             if req.t_decode_start < 0:
                 req.t_decode_start = now
+        if pages:
+            # one scatter for the whole admitted batch
+            self.pool = self.pool.install(
+                pages, jnp.concatenate(payload_k, axis=1),
+                jnp.concatenate(payload_v, axis=1))
         return admitted
 
     def step(self, now: float) -> List[FinishedRequest]:
@@ -87,20 +141,14 @@ class DecodeEngine:
         if not self.slots:
             return []
         self.iterations += 1
-        toks = np.zeros((self.max_slots, 1), np.int32)
-        pos = np.zeros((self.max_slots,), np.int32)
-        for s, st in self.slots.items():
-            toks[s, 0] = st.last_token
-            pos[s] = st.req.prompt_len + st.req.generated
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), self.cache, jnp.asarray(pos))
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-
+        if self.backend == "paged":
+            nxt = self._iteration_paged()
+        else:
+            nxt = self._iteration_dense()
         finished: List[FinishedRequest] = []
         for s in list(self.slots):
             st = self.slots[s]
             req = st.req
-            self.scheduler.step_token(req.rid)
             st.last_token = int(nxt[s])
             st.tokens.append(st.last_token)
             if (req.generated >= req.decode_len
@@ -111,6 +159,44 @@ class DecodeEngine:
                 finished.append(FinishedRequest(req=req, tokens=st.tokens))
                 del self.slots[s]
         return finished
+
+    def _iteration_paged(self) -> np.ndarray:
+        """Full-slot-batch fused decode against the page pool."""
+        ms, ps, trash = self.max_slots, self.page_size, self._trash
+        toks = np.zeros((ms, 1), np.int32)
+        pos = np.zeros((ms,), np.int32)
+        pages = np.full((ms,), trash, np.int32)
+        offs = np.zeros((ms,), np.int32)
+        bt = np.full((ms, self._bt_width), trash, np.int32)
+        lens = np.zeros((ms,), np.int32)
+        for s, st in self.slots.items():
+            p = st.req.prompt_len + st.req.generated
+            # account the token being appended THIS iteration; the
+            # returned physical page is where its K/V scatters
+            pages[s] = self.scheduler.step_token(st.req.rid)
+            toks[s, 0] = st.last_token
+            pos[s] = p
+            offs[s] = p % ps
+            table = self.alloc.table(st.req.rid)
+            bt[s, :len(table)] = table
+            lens[s] = p + 1
+        nxt, kp, vp = self._decode_paged(
+            self.params, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(bt),
+            jnp.asarray(lens), self.pool.k, self.pool.v)
+        self.pool = PagePool(k=kp, v=vp)
+        return np.asarray(nxt)
+
+    def _iteration_dense(self) -> np.ndarray:
+        toks = np.zeros((self.max_slots, 1), np.int32)
+        pos = np.zeros((self.max_slots,), np.int32)
+        for s, st in self.slots.items():
+            toks[s, 0] = st.last_token
+            pos[s] = st.req.prompt_len + st.req.generated
+            self.scheduler.step_token(st.req.rid)
+        nxt, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache, jnp.asarray(pos))
+        return np.asarray(nxt)
 
     # ------------------------------------------------------------------
     def load(self) -> dict:

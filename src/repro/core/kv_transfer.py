@@ -14,7 +14,10 @@ one-sided put.
 
 Granularity: request-level (paper's implementation) or chunk-level
 (paper's future work — free here because chunked prefill yields
-page-aligned chunks; overlaps transfer with remaining chunks).
+page-aligned chunks; overlaps transfer with remaining chunks).  The
+paged engines account payloads at PAGE granularity (``kv_page_bytes``):
+what actually moves is the request's live pool pages, which is also the
+unit a per-chunk streamed transfer would put on the wire.
 """
 from __future__ import annotations
 
@@ -47,6 +50,16 @@ TS_SOCKET = LinkSpec(LinkType.INDIRECT, 12.5e9, 100e-6, False,  # 100 Gbps
                      host_bounce_Bps=40e9)
 # TPU target: inter-pod DCI / intra-pod ICI per-link
 TS_ICI = LinkSpec(LinkType.DIRECT, 50e9, 5e-6, True)
+
+
+def kv_page_bytes(cfg: ModelConfig, n_tokens: int, page_size: int,
+                  dtype_bytes: int = 2) -> int:
+    """Prefilled-KV payload at PAGE granularity: the paged engines ship
+    whole live pages (ceil(n_tokens / page_size) of them), so the wire
+    bytes are the page contents, not the raw token count — this is the
+    unit the paper's per-chunk streamed transfer accounts in."""
+    pages = -(-max(1, n_tokens) // page_size)
+    return kv_bytes(cfg, pages * page_size, dtype_bytes)
 
 
 def kv_bytes(cfg: ModelConfig, n_tokens: int, dtype_bytes: int = 2) -> int:
@@ -90,13 +103,16 @@ class NetworkStack:
         return t
 
     def send_kv(self, cfg: ModelConfig, n_tokens: int,
-                n_chunks: int = 1) -> float:
+                n_chunks: int = 1, page_size: int = 0) -> float:
         """Returns emulated completion delay (s) for a prefilled KV.
 
-        chunk-level granularity pays setup per chunk but overlaps with
-        prefill of later chunks: only the LAST chunk's latency lands on
-        the critical path."""
-        total = kv_bytes(cfg, n_tokens)
+        ``page_size > 0`` models the paged engines' transfer: payload =
+        live pages (page-aligned), which is what a one-sided page put
+        actually moves.  chunk-level granularity pays setup per chunk but
+        overlaps with prefill of later chunks: only the LAST chunk's
+        latency lands on the critical path."""
+        total = (kv_page_bytes(cfg, n_tokens, page_size) if page_size
+                 else kv_bytes(cfg, n_tokens))
         self.bytes_sent += total
         if self.granularity == "chunk" and n_chunks > 1:
             self.transfers += n_chunks

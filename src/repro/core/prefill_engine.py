@@ -4,12 +4,22 @@ chunked-prefill LLM engine -> dispatcher.
 Real-execution engine: runs the actual JAX model on CPU (tiny configs in
 tests/examples).  Cluster-scale behaviour is reproduced by the simulator
 (runtime/simulator.py) with the same scheduler/dispatcher objects.
+
+Execution backends:
+  * ``paged`` (default for pure-attention archs) — the engine owns a
+    device ``PagePool``; one ``step`` executes the WHOLE fixed-size chunk
+    as a single fused ``model.prefill_paged`` call (segments of multiple
+    requests packed on the batch dim), writing K/V straight into pages.
+    Finished requests ship ``(block table, page contents)`` — no dense
+    cache pytree ever exists on this path.
+  * ``dense`` — legacy per-segment ``model.prefill`` against per-request
+    dense caches; retained for recurrent / MLA / windowed architectures.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import time
-from typing import Callable, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +29,7 @@ from repro.core import chunking
 from repro.core.kv_transfer import NetworkStack
 from repro.core.sched.dispatcher import Dispatcher
 from repro.core.sched.prefill_scheduler import PrefillScheduler
+from repro.kvcache.paged import OutOfPages, PagedAllocator, PagePool
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.runtime.request import Phase, Request
@@ -26,12 +37,47 @@ from repro.runtime.request import Phase, Request
 
 @dataclasses.dataclass
 class PrefilledKV:
-    """What the dispatcher ships to a decode instance."""
+    """What the dispatcher ships to a decode instance.
+
+    Paged backend: ``pages_k``/``pages_v`` hold the request's page
+    contents, shape (L, n_pages, page, kvh, hd), plus ``kv_len`` valid
+    tokens — the receiver installs them into its own pool and builds a
+    block-table row.  Dense backend: ``cache`` is a batch=1 cache pytree.
+    """
     req: Request
-    cache: object                # batch=1 cache pytree (prompt written)
     first_token: int             # argmax token from prefill (the 'first token')
     transfer_delay_s: float      # emulated network wait
     n_chunks: int = 1
+    cache: object = None         # dense backend only
+    pages_k: object = None       # paged backend only
+    pages_v: object = None
+    kv_len: int = 0
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
+
+
+def resolve_backend(cfg: ModelConfig, backend: str) -> str:
+    """Shared engine backend selection: ``auto`` picks paged whenever the
+    config supports it; explicitly asking for paged on an unsupported
+    arch is a loud error."""
+    assert backend in ("auto", "paged", "dense"), backend
+    if backend == "auto":
+        return "paged" if M.paged_supported(cfg) else "dense"
+    if backend == "paged" and not M.paged_supported(cfg):
+        raise ValueError(f"{cfg.name}: paged backend unsupported")
+    return backend
+
+
+def make_page_pool(cfg: ModelConfig, n_pages: int, page_size: int):
+    """Device pool with one extra physical page past the allocator's
+    range — the scratch ("trash") page pad tokens and dead slots scatter
+    to.  Returns (pool, trash_page_id)."""
+    pool = PagePool.create(cfg.n_layers, n_pages + 1, page_size,
+                           cfg.n_kv_heads, cfg.resolved_head_dim,
+                           dtype=jnp.dtype(cfg.dtype))
+    return pool, n_pages
 
 
 class PrefillEngine:
@@ -40,7 +86,9 @@ class PrefillEngine:
                  dispatcher: Optional[Dispatcher] = None,
                  network: Optional[NetworkStack] = None,
                  predictor=None,
-                 chunk_size: int = 64, max_seq: int = 512):
+                 chunk_size: int = 64, max_seq: int = 512,
+                 backend: str = "auto",
+                 n_pages: int = 512, page_size: int = 16):
         self.iid = iid
         self.cfg = cfg
         self.params = params
@@ -50,17 +98,42 @@ class PrefillEngine:
         self.predictor = predictor
         self.chunk_size = chunk_size
         self.max_seq = max_seq
-        # per-request in-flight prefill state
-        self._caches: Dict[str, object] = {}
-        self._chunk_queue: List[chunking.Chunk] = []
+        self.backend = resolve_backend(cfg, backend)
+        self.page_size = page_size
+        self._chunk_queue: Deque[chunking.Chunk] = collections.deque()
         self._reqs: Dict[str, Request] = {}
+        self.chunk_steps = 0         # steps that actually ran a chunk
+        self.fused_calls = 0         # one per chunk on the paged backend
 
-        def _prefill(params, toks, cache, q_offset):
-            return M.prefill(params, cfg, toks, cache, q_offset=q_offset)
-        self._prefill = jax.jit(_prefill, static_argnames=())
+        if self.backend == "paged":
+            self.alloc = PagedAllocator(n_pages=n_pages,
+                                        page_size=page_size)
+            self.pool, self._trash = make_page_pool(cfg, n_pages,
+                                                    page_size)
+            self._bt_width = self.alloc.pages_for(max_seq)
+
+            def _prefill_paged(params, toks, qoff, kvlen, last, bt, pg,
+                               off, kp, vp):
+                return M.prefill_paged(params, cfg, toks, qoff, kvlen,
+                                       last, bt, pg, off, kp, vp)
+            # donate the pools: XLA updates them in place instead of
+            # copying the whole KV pool every chunk (no-op on CPU)
+            self._prefill_paged = jax.jit(_prefill_paged,
+                                          donate_argnums=(8, 9))
+        else:
+            self._caches: Dict[str, object] = {}
+
+            def _prefill(params, toks, cache, q_offset):
+                return M.prefill(params, cfg, toks, cache,
+                                 q_offset=q_offset)
+            self._prefill = jax.jit(_prefill)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        # strict bound: decode must append at least one token at position
+        # prompt_len inside a pages_for(max_seq)-wide block-table row
+        assert req.prompt_len < self.max_seq, \
+            f"{req.rid}: prompt {req.prompt_len} >= max_seq {self.max_seq}"
         self.scheduler.add(req)
         self._reqs[req.rid] = req
 
@@ -77,10 +150,35 @@ class PrefillEngine:
         batch = self.scheduler.next_batch(self.scheduler.sched_batch)
         if not batch:
             return
+        if self.backend == "paged":
+            # reserve each request's prompt pages up front (the fused
+            # chunk calls scatter into them); requests that don't fit the
+            # pool right now go back to the head of the queue —
+            # backpressure instead of an OutOfPages crash mid-batch
+            fit, defer = [], []
+            for r in batch:
+                if self.alloc.can_admit(r.prompt_len):
+                    self.alloc.alloc(r.rid, r.prompt_len)
+                    fit.append(r)
+                else:
+                    if self.alloc.pages_for(max(1, r.prompt_len)) \
+                            > self.alloc.n_pages:
+                        raise OutOfPages(
+                            f"{r.rid}: prompt {r.prompt_len} exceeds the "
+                            f"whole pool ({self.alloc.n_pages} pages)")
+                    defer.append(r)
+            if defer:
+                self.scheduler.requeue_front(defer)
+            batch = fit
+            if not batch:
+                return
+        else:
+            for r in batch:
+                self._caches[r.rid] = M.init_cache(self.cfg, 1,
+                                                   self.max_seq)
         pairs = [(r.rid, r.prompt_len) for r in batch]
         self._chunk_queue.extend(chunking.partition(pairs, self.chunk_size))
         for r in batch:
-            self._caches[r.rid] = M.init_cache(self.cfg, 1, self.max_seq)
             r.phase = Phase.PREFILL
 
     def step(self, now: float) -> List[PrefilledKV]:
@@ -90,7 +188,78 @@ class PrefillEngine:
             self._refill_chunks()
         if not self._chunk_queue:
             return []
-        chunk = self._chunk_queue.pop(0)
+        chunk = self._chunk_queue.popleft()
+        self.chunk_steps += 1
+        if self.backend == "paged":
+            return self._step_paged(chunk, now)
+        return self._step_dense(chunk, now)
+
+    # -- paged backend -------------------------------------------------
+    def _step_paged(self, chunk: chunking.Chunk, now: float
+                    ) -> List[PrefilledKV]:
+        """Pack the chunk's segments flat and issue exactly ONE fused
+        model call for the whole chunk."""
+        segs = chunk.segments
+        n = len(segs)
+        ns = _pow2(n)                          # jit-stable batch dim
+        sq = _pow2(max(s.length for s in segs))
+        ps, trash = self.page_size, self._trash
+        toks = np.zeros((ns, sq), np.int32)
+        qoff = np.zeros((ns,), np.int32)
+        kvlen = np.zeros((ns,), np.int32)
+        last = np.zeros((ns,), np.int32)
+        bt = np.full((ns, self._bt_width), trash, np.int32)
+        pg = np.full((ns, sq), trash, np.int32)
+        off = np.tile(np.arange(sq, dtype=np.int32) % ps, (ns, 1))
+        for i, seg in enumerate(segs):
+            req = self._reqs[seg.rid]
+            if req.t_prefill_start < 0:
+                req.t_prefill_start = now
+            if req.prompt_tokens is not None:
+                toks[i, :seg.length] = req.prompt_tokens[
+                    seg.req_start: seg.req_start + seg.length]
+            qoff[i] = seg.req_start
+            kvlen[i] = seg.req_start + seg.length
+            last[i] = seg.length - 1
+            table = self.alloc.table(seg.rid)
+            bt[i, :len(table)] = table
+            pos = seg.req_start + np.arange(seg.length)
+            pg[i, :seg.length] = np.asarray(table)[pos // ps]
+            off[i, :seg.length] = pos % ps
+        next_tok, _, kp, vp = self._prefill_paged(
+            self.params, jnp.asarray(toks), jnp.asarray(qoff),
+            jnp.asarray(kvlen), jnp.asarray(last), jnp.asarray(bt),
+            jnp.asarray(pg), jnp.asarray(off), self.pool.k, self.pool.v)
+        self.pool = PagePool(k=kp, v=vp)
+        self.fused_calls += 1
+        next_tok = np.asarray(next_tok)
+        finished: List[PrefilledKV] = []
+        for i, seg in enumerate(segs):
+            req = self._reqs[seg.rid]
+            req.prefilled = seg.req_start + seg.length
+            if req.prefilled >= req.prompt_len:
+                finished.append(
+                    self._finish_paged(req, int(next_tok[i]), now))
+        return finished
+
+    def _finish_paged(self, req: Request, first_tok: int, now: float
+                      ) -> PrefilledKV:
+        n_chunks = self._note_finished(req, now)
+        delay = self.network.send_kv(self.cfg, req.prompt_len,
+                                     n_chunks=n_chunks,
+                                     page_size=self.page_size)
+        req.phase = Phase.TRANSFER
+        pages_k, pages_v = self.pool.gather(self.alloc.table(req.rid))
+        self.alloc.free(req.rid)
+        self._reqs.pop(req.rid)
+        return PrefilledKV(req=req, first_token=first_tok,
+                           transfer_delay_s=delay, n_chunks=n_chunks,
+                           pages_k=pages_k, pages_v=pages_v,
+                           kv_len=req.prompt_len)
+
+    # -- dense backend (legacy fallback) --------------------------------
+    def _step_dense(self, chunk: chunking.Chunk, now: float
+                    ) -> List[PrefilledKV]:
         finished: List[PrefilledKV] = []
         for seg in chunk.segments:
             req = self._reqs[seg.rid]
@@ -106,18 +275,12 @@ class PrefillEngine:
             self._caches[seg.rid] = cache
             req.prefilled = seg.req_start + seg.length
             if req.prefilled >= req.prompt_len:
-                finished.append(self._finish_prefill(req, logits, now))
+                finished.append(self._finish_dense(req, logits, now))
         return finished
 
-    def _finish_prefill(self, req: Request, logits, now: float
-                        ) -> PrefilledKV:
-        req.t_first_token = now     # chunked prefill emits the first token
-        if self.predictor is not None:
-            b, lo, hi = self.predictor.predict_range(
-                req.prompt_tokens, req.decode_len)
-            req.predicted_bucket, req.predicted_lo, req.predicted_hi = \
-                b, lo, hi
-        n_chunks = chunking.chunks_for(req.prompt_len, self.chunk_size)
+    def _finish_dense(self, req: Request, logits, now: float
+                      ) -> PrefilledKV:
+        n_chunks = self._note_finished(req, now)
         delay = self.network.send_kv(self.cfg, req.prompt_len,
                                      n_chunks=n_chunks)
         req.phase = Phase.TRANSFER
@@ -125,7 +288,18 @@ class PrefillEngine:
         cache = self._caches.pop(req.rid)
         self._reqs.pop(req.rid)
         return PrefilledKV(req=req, cache=cache, first_token=first_tok,
-                           transfer_delay_s=delay, n_chunks=n_chunks)
+                           transfer_delay_s=delay, n_chunks=n_chunks,
+                           kv_len=req.prompt_len)
+
+    # -- shared finish bookkeeping --------------------------------------
+    def _note_finished(self, req: Request, now: float) -> int:
+        req.t_first_token = now     # chunked prefill emits the first token
+        if self.predictor is not None:
+            b, lo, hi = self.predictor.predict_range(
+                req.prompt_tokens, req.decode_len)
+            req.predicted_bucket, req.predicted_lo, req.predicted_hi = \
+                b, lo, hi
+        return chunking.chunks_for(req.prompt_len, self.chunk_size)
 
     def select_decode_instance(self, loads, req: Request) -> Optional[str]:
         return self.dispatcher.select(

@@ -100,10 +100,13 @@ class DecodeScheduler:
         self.queue = remaining
         return admitted
 
-    def step_token(self, rid: str) -> None:
-        """Account one generated token for a running request."""
-        self.alloc.append_token(rid)
+    def step_token(self, rid: str) -> int:
+        """Account one generated token for a running request.  Returns
+        the physical page holding the new token (the paged decode engine
+        scatters the token's K/V there)."""
+        page = self.alloc.append_token(rid)
         self.running[rid].req.generated += 1
+        return page
 
     def finish(self, rid: str) -> None:
         self.alloc.free(rid)

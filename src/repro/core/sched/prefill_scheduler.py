@@ -57,6 +57,12 @@ class PrefillScheduler:
             out.append(self.scheduled.popleft())
         return out
 
+    def requeue_front(self, reqs: List[Request]) -> None:
+        """Put popped requests back at the head of the scheduled queue in
+        their original order (engine backpressure, e.g. KV pages full)."""
+        for r in reversed(reqs):
+            self.scheduled.appendleft(r)
+
     def peek_all(self) -> List[Request]:
         if not self.scheduled:
             self._schedule_window()

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
 from repro.kernels.paged_decode_attention import paged_decode_attention
+from repro.kernels.paged_prefill_attention import paged_prefill_attention
 
 
 @functools.cache
@@ -21,8 +22,24 @@ def _interpret() -> bool:
 
 
 def prefill_attention(q, k_cache, v_cache, kv_len, q_offset, *,
-                      window: int = 0, causal: bool = True,
+                      block_table=None, window: int = 0, causal: bool = True,
                       block_q: int = 0, block_kv: int = 0):
+    """Chunked-prefill attention.
+
+    Dense form (``block_table=None``): k_cache/v_cache are per-request
+    (b, skv, kvh, hd) caches and ``q_offset`` is a (1,) shared chunk start.
+
+    Paged form: k_cache/v_cache are the shared page pools
+    (n_pages, page, kvh, hd), ``block_table`` is (b, n_slots) physical
+    page ids and ``q_offset``/``kv_len`` are per-segment (b,) scalars —
+    one fused call covers a whole multi-request chunk.
+    """
+    if block_table is not None:
+        kwargs = {"block_q": block_q} if block_q else {}
+        return paged_prefill_attention(
+            q, k_cache, v_cache, jnp.asarray(block_table),
+            jnp.asarray(kv_len), jnp.asarray(q_offset),
+            window=window, causal=causal, interpret=_interpret(), **kwargs)
     kwargs = {}
     if block_q:
         kwargs["block_q"] = block_q

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: chunked-prefill flash attention over a PAGED cache.
+
+The serving-path companion of ``chunked_prefill_attention``: instead of a
+dense per-request (b, skv, kvh, hd) cache, K/V live in the shared device
+page pool (n_pages, page, kvh, hd) and each packed segment addresses its
+pages through a block table.  This is what lets one fused call execute a
+whole fixed-size chunk whose segments belong to *different* requests —
+the batch dim is "segments of the current chunk", each with its own
+``q_offset`` (absolute position of the segment start) and ``kv_len``
+(valid tokens after this segment is appended).
+
+TPU adaptation: the block table is a scalar-prefetch operand, so the K/V
+BlockSpec ``index_map`` resolves the physical page for each
+(segment, page-slot) grid step and Pallas streams exactly the live pages
+HBM->VMEM — the kv block size IS the page size.  Online-softmax state
+lives in VMEM scratch and carries across the page grid dim.
+
+Grid: (segments, heads, q_blocks, page_slots); page slots innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+
+
+def _kernel(bt_ref, kv_len_ref, q_off_ref,  # scalar prefetch
+            q_ref, k_ref, v_ref,            # VMEM blocks
+            o_ref,                          # VMEM out block
+            m_ref, l_ref, acc_ref,          # VMEM scratch
+            *, block_q: int, page_size: int, n_slots: int,
+            window: int, causal: bool):
+    bi = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kv_len_ref[bi]
+    q_off = q_off_ref[bi]
+    q_pos = q_off + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, page_size), 0)
+    k_pos = ki * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, page_size), 1)
+
+    # skip pages beyond the valid length / entirely a-causal pages
+    blk_k_min = ki * page_size
+    blk_q_max = q_off + (qi + 1) * block_q - 1
+    live = blk_k_min < kv_len
+    if causal:
+        live = jnp.logical_and(live, blk_k_min <= blk_q_max)
+
+    @pl.when(live)
+    def _update():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (page, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)      # (page, hd_v)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * (q.shape[-1] ** -0.5)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_slots - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "causal", "block_q", "interpret"))
+def paged_prefill_attention(
+        q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+        block_table: jnp.ndarray, kv_len: jnp.ndarray,
+        q_offset: jnp.ndarray, *,
+        window: int = 0, causal: bool = True,
+        block_q: int = DEFAULT_BLOCK_Q,
+        interpret: bool = False) -> jnp.ndarray:
+    """q: (segs, sq, h, hd); k_pool/v_pool: (n_pages, page, kvh, hd) with
+    each segment's tokens already scattered into its pages; block_table:
+    (segs, n_slots) physical page ids (pad slots may repeat a live or
+    scratch page — masked by ``kv_len``); kv_len: (segs,) valid tokens
+    after the segment append; q_offset: (segs,) absolute position of each
+    segment's first query.  Returns (segs, sq, h, hd_v)."""
+    b, sq, h, hd = q.shape
+    n_pages, page_size, kvh, hd_v = v_pool.shape
+    n_slots = block_table.shape[1]
+    rep = h // kvh
+    block_q = min(block_q, sq)
+    assert sq % block_q == 0, (sq, block_q)
+    nq = sq // block_q
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, h, nq, n_slots),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda bi, hi, qi, ki, *_: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda bi, hi, qi, ki, bt, *_:
+                         (bt[bi, ki], 0, hi // rep, 0)),
+            pl.BlockSpec((1, page_size, 1, hd_v),
+                         lambda bi, hi, qi, ki, bt, *_:
+                         (bt[bi, ki], 0, hi // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd_v),
+                               lambda bi, hi, qi, ki, *_: (bi, qi, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd_v), jnp.float32),
+        ])
+    kern = functools.partial(
+        _kernel, block_q=block_q, page_size=page_size, n_slots=n_slots,
+        window=window, causal=causal)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, hd_v), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), kv_len.astype(jnp.int32),
+      q_offset.astype(jnp.int32), q, k_pool, v_pool)

@@ -30,6 +30,34 @@ def ref_chunked_prefill_attention(q, k_cache, v_cache, kv_len, q_offset, *,
     return out.reshape(b, sq, h, hd_v).astype(q.dtype)
 
 
+def ref_paged_prefill_attention(q, k_pool, v_pool, block_table, kv_len,
+                                q_offset, *, window: int = 0,
+                                causal: bool = True):
+    """Oracle for kernels.paged_prefill_attention: gather each segment's
+    pages densely, then run the dense chunked-prefill oracle with
+    per-segment ``q_offset``."""
+    b, sq, h, hd = q.shape
+    n_pages, page, kvh, hd_v = v_pool.shape
+    n_slots = block_table.shape[1]
+    rep = h // kvh
+    k = k_pool[block_table].reshape(b, n_slots * page, kvh, hd)
+    v = v_pool[block_table].reshape(b, n_slots * page, kvh, hd_v)
+    qf = q.astype(jnp.float32).reshape(b, sq, kvh, rep, hd)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qf, k.astype(jnp.float32)) \
+        * hd ** -0.5
+    q_pos = q_offset[:, None] + jnp.arange(sq)[None, :]       # (b, sq)
+    k_pos = jnp.arange(n_slots * page)
+    mask = k_pos[None, None, :] < kv_len[:, None, None]       # (b,1,K)
+    if causal:
+        mask = mask & (q_pos[:, :, None] >= k_pos[None, None, :])
+    if window:
+        mask = mask & (k_pos[None, None, :] > q_pos[:, :, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd_v).astype(q.dtype)
+
+
 def ref_paged_decode_attention(q, k_pool, v_pool, block_table, lens):
     """Oracle for kernels.paged_decode_attention: gather pages densely,
     then masked single-token attention."""

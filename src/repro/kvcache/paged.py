@@ -7,7 +7,13 @@ Two layers, mirroring vLLM's split (§2.1, [21]):
   (greedy / reserve-static / reserve-dynamic, §3.4) make admission
   decisions against this, and the cluster monitor broadcasts its load.
 * ``PagePool`` — the device-side tensors (layers, n_pages, page, kvh, hd)
-  plus jit'd scatter ops used with kernels/paged_decode_attention.
+  plus jit'd scatter/gather ops.  The serving engines attend against it
+  through kernels/paged_prefill_attention (fused chunk prefill) and
+  kernels/paged_decode_attention (batched decode); ``gather``/``install``
+  are the page-granular KV-transfer endpoints.  Engines reserve one extra
+  physical page past the allocator's range as a scratch ("trash") page:
+  pad tokens and dead slots scatter there and no block table references
+  it.
 """
 from __future__ import annotations
 
@@ -130,3 +136,20 @@ class PagePool:
 
     def layer(self, layer: int):
         return self.k[layer], self.v[layer]
+
+    # -- serving-path transfer helpers ---------------------------------
+    def gather(self, pages):
+        """Extract the page contents for one request — what the prefill
+        instance ships to decode.  pages: (n,) physical ids.
+        Returns (k, v) of shape (L, n, page, kvh, hd)."""
+        idx = jnp.asarray(pages)
+        return self.k[:, idx], self.v[:, idx]
+
+    def install(self, pages, k_pages, v_pages) -> "PagePool":
+        """Install received page contents (all layers at once) into local
+        physical pages — decode-side admission.  pages: (n,) ids;
+        k_pages/v_pages: (L, n, page, kvh, hd)."""
+        idx = jnp.asarray(pages)
+        return PagePool(
+            k=self.k.at[:, idx].set(k_pages.astype(self.k.dtype)),
+            v=self.v.at[:, idx].set(v_pages.astype(self.v.dtype)))

@@ -254,6 +254,51 @@ def gqa_prefill(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict, *,
     return out, {"k": k_cache, "v": v_cache}
 
 
+def gqa_prefill_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                      k_layer: jnp.ndarray, v_layer: jnp.ndarray, *,
+                      positions, q_offset, kv_len, block_tables,
+                      pages_idx, offs_idx, window: int = 0):
+    """Fused chunk prefill against one layer's page pool.
+
+    x: (segs, sq, d) — the packed segments of one fixed-size chunk;
+    k_layer/v_layer: (n_pages, page, kvh, hd) this layer's pool;
+    positions: (segs, sq) absolute token positions;
+    pages_idx/offs_idx: (segs, sq) physical (page, in-page) slot per
+    token (pad tokens point at the engine's scratch page).  The chunk's
+    K/V is scattered into the pool first, then the Pallas paged-prefill
+    kernel attends over (written prefix ++ this chunk) through the block
+    tables.  Returns (attn_out, k_layer, v_layer).
+    """
+    from repro.kernels import ops
+    b, s, _ = x.shape
+    q, k, v = gqa_qkv(p, cfg, x, positions)
+    k_layer = k_layer.at[pages_idx, offs_idx].set(k.astype(k_layer.dtype))
+    v_layer = v_layer.at[pages_idx, offs_idx].set(v.astype(v_layer.dtype))
+    out = ops.prefill_attention(q, k_layer, v_layer, kv_len, q_offset,
+                                block_table=block_tables, window=window)
+    return out.reshape(b, s, -1) @ p["wo"], k_layer, v_layer
+
+
+def gqa_decode_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                     k_layer: jnp.ndarray, v_layer: jnp.ndarray, *,
+                     pos, pages, offs, block_tables, lens):
+    """Batched one-token decode against one layer's page pool.
+
+    x: (slots, 1, d); pos: (slots,) append position per slot;
+    pages/offs: (slots,) physical slot of the appended token (dead slots
+    point at the scratch page); lens: (slots,) valid tokens incl. the
+    append.  Returns (attn_out, k_layer, v_layer).
+    """
+    from repro.kernels import ops
+    b = x.shape[0]
+    q, k, v = gqa_qkv(p, cfg, x, pos[:, None])
+    k_layer = k_layer.at[pages, offs].set(k[:, 0].astype(k_layer.dtype))
+    v_layer = v_layer.at[pages, offs].set(v[:, 0].astype(v_layer.dtype))
+    out = ops.decode_attention(q[:, 0], k_layer, v_layer, block_tables,
+                               lens)
+    return out.reshape(b, 1, -1) @ p["wo"], k_layer, v_layer
+
+
 def gqa_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict,
                pos, *, window: int = 0):
     """One-token decode. Cache seq dim may be a ring buffer (window mode)."""

@@ -9,6 +9,22 @@ Entry points (all pure functions of (params, cfg, ...)):
   * ``prefill_chunked``  — the paper's fixed-size chunk loop (lax.scan)
   * ``decode_step``      — one token per request, per-request positions
   * ``classify``         — length-predictor classification head
+
+Paged serving entry points (the engines' default execution backend —
+attention runs through the Pallas kernels in ``kernels/ops.py`` against
+a shared device page pool instead of per-request dense caches):
+  * ``paged_supported``  — whether a config can use the paged backend
+  * ``prefill_paged``    — one WHOLE fixed-size chunk as a single fused
+                           call: segments of multiple requests packed on
+                           the batch dim with per-segment q_offset/kv_len
+  * ``decode_step_paged``— full-slot-batch decode against the pool via
+                           block tables; argmax stays on device
+  * ``decode_step_greedy`` — dense decode with on-device argmax (the
+                           dense fallback's serving step)
+
+The dense cache path (``init_cache``/``prefill``/``decode_step``) remains
+the substrate for training, recurrent/MLA/windowed architectures, and
+the coupled vLLM-style baseline.
 """
 from __future__ import annotations
 
@@ -18,9 +34,11 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.models import attention as A
 from repro.models import blocks as B
+from repro.models import mlp as MLP
 from repro.models import sharding as SH
-from repro.models.config import CROSS_ATTN, ModelConfig
+from repro.models.config import ATTN, CROSS_ATTN, ModelConfig
 
 
 def _dtype(cfg: ModelConfig):
@@ -338,6 +356,145 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
     h, cache, _ = _run_layers(params, cfg, h, mode="decode", caches=cache,
                               pos=pos)
     return _head(params, cfg, h), cache
+
+
+def decode_step_greedy(params, cfg: ModelConfig, tokens, cache, pos):
+    """``decode_step`` with token selection folded in: returns
+    (next_tokens (b,) int32, cache) so one jitted serving iteration
+    transfers a single int per slot instead of (b, vocab) logits."""
+    logits, cache = decode_step(params, cfg, tokens, cache, pos)
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+
+# ---------------------------------------------------------------------------
+# paged execution backend (serving hot path)
+# ---------------------------------------------------------------------------
+def paged_supported(cfg: ModelConfig) -> bool:
+    """True if the paged backend can serve this config: uniform full
+    self-attention layers over a GQA cache.  MLA, recurrent/hybrid,
+    encoder-decoder and sliding-window archs stay on the dense path."""
+    return (cfg.mla is None and not cfg.is_encoder_decoder
+            and cfg.sliding_window == 0
+            and all(k == ATTN for k in cfg.layer_kinds))
+
+
+def _paged_attn_block(p, cfg: ModelConfig, x, k_layer, v_layer, attn):
+    """One ATTN block (norm, attention-vs-pool, MLP/MoE) on the paged
+    path.  ``attn(p_attn, h, k_layer, v_layer)`` performs the pool
+    scatter + kernel call for the current mode."""
+    h = B.rms_norm(x, p["norm1"], cfg.norm_eps)
+    a, k_layer, v_layer = attn(p["attn"], h, k_layer, v_layer)
+    x = x + a
+    h2 = B.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if "moe" in p:
+        m, _ = MLP.moe_forward(p["moe"], cfg, h2)
+    else:
+        m = MLP.mlp_forward(p["mlp"], cfg, h2)
+    return x + m, k_layer, v_layer
+
+
+def _run_layers_paged(params, cfg: ModelConfig, h, k_pool, v_pool, attn):
+    """Layer runner over the (L, n_pages, page, kvh, hd) pools: prefix
+    and suffix unrolled, body scanned — pool rows are indexed by absolute
+    layer id so the engines' PagePool layout is position-stable."""
+    npre = len(cfg.prefix)
+    pat = len(cfg.pattern)
+
+    def one(p_block, h, k_pool, v_pool, layer):
+        k_layer = jax.lax.dynamic_index_in_dim(k_pool, layer, 0,
+                                               keepdims=False)
+        v_layer = jax.lax.dynamic_index_in_dim(v_pool, layer, 0,
+                                               keepdims=False)
+        h, k_layer, v_layer = _paged_attn_block(p_block, cfg, h, k_layer,
+                                                v_layer, attn)
+        h = SH.act_constrain(h)
+        k_pool = jax.lax.dynamic_update_index_in_dim(k_pool, k_layer,
+                                                     layer, 0)
+        v_pool = jax.lax.dynamic_update_index_in_dim(v_pool, v_layer,
+                                                     layer, 0)
+        return h, k_pool, v_pool
+
+    h = SH.act_constrain(h)
+    for i in range(npre):
+        h, k_pool, v_pool = one(params["prefix"][i], h, k_pool, v_pool, i)
+    if cfg.n_repeats:
+        def body(carry, xs):
+            h, kp, vp = carry
+            gp, ridx = xs
+            for j in range(pat):
+                h, kp, vp = one(gp[j], h, kp, vp, npre + ridx * pat + j)
+            return (h, kp, vp), None
+        (h, k_pool, v_pool), _ = jax.lax.scan(
+            body, (h, k_pool, v_pool),
+            (params["body"], jnp.arange(cfg.n_repeats)))
+    for i in range(len(cfg.suffix)):
+        h, k_pool, v_pool = one(params["suffix"][i], h, k_pool, v_pool,
+                                npre + cfg.n_repeats * pat + i)
+    return h, k_pool, v_pool
+
+
+def prefill_paged(params, cfg: ModelConfig, tokens, q_offset, kv_len,
+                  last_idx, block_tables, pages_idx, offs_idx,
+                  k_pool, v_pool):
+    """One WHOLE fixed-size chunk as a single fused call (paper §3.3.3).
+
+    The chunk's segments — slices of *different* requests — are packed on
+    the batch dim; every layer scatters the chunk's K/V straight into the
+    shared page pool and attends through ``kernels.ops.prefill_attention``
+    with per-segment scalars (no per-segment dispatch, no dense caches).
+
+    tokens: (segs, sq) right-padded segment tokens;
+    q_offset: (segs,) absolute position of each segment start;
+    kv_len: (segs,) valid KV tokens after this segment (q_offset + len);
+    last_idx: (segs,) index of each segment's last valid token;
+    block_tables: (segs, n_slots) physical page ids (pad slots -> scratch
+    page); pages_idx/offs_idx: (segs, sq) physical slot per token;
+    k_pool/v_pool: (L, n_pages, page, kvh, hd).
+    Returns (next_tokens (segs,) int32, last_logits (segs, V),
+    k_pool, v_pool) — next_tokens[i] is only meaningful for segments that
+    complete their request's prompt.
+    """
+    sq = tokens.shape[1]
+    positions = q_offset[:, None] + jnp.arange(sq)[None, :]
+    h = _embed(params, cfg, tokens, positions)
+
+    def attn(p, x, k_layer, v_layer):
+        return A.gqa_prefill_paged(
+            p, cfg, x, k_layer, v_layer, positions=positions,
+            q_offset=q_offset, kv_len=kv_len, block_tables=block_tables,
+            pages_idx=pages_idx, offs_idx=offs_idx)
+
+    h, k_pool, v_pool = _run_layers_paged(params, cfg, h, k_pool, v_pool,
+                                          attn)
+    last_h = jnp.take_along_axis(h, last_idx[:, None, None], axis=1)
+    logits = _head(params, cfg, last_h)            # (segs, 1, V)
+    next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+    return next_tok, logits[:, 0], k_pool, v_pool
+
+
+def decode_step_paged(params, cfg: ModelConfig, tokens, pos, pages, offs,
+                      block_tables, lens, k_pool, v_pool):
+    """Full-slot-batch decode iteration against the shared page pool.
+
+    tokens: (slots, 1) last emitted token per slot; pos: (slots,) append
+    position (== tokens already cached); pages/offs: (slots,) physical
+    slot of the appended token (dead slots -> scratch page);
+    block_tables: (slots, n_slots); lens: (slots,) valid tokens including
+    the append.  Token selection (argmax) stays on device: returns
+    (next_tokens (slots,) int32, k_pool, v_pool).
+    """
+    h = _embed(params, cfg, tokens, pos[:, None])
+
+    def attn(p, x, k_layer, v_layer):
+        return A.gqa_decode_paged(
+            p, cfg, x, k_layer, v_layer, pos=pos, pages=pages, offs=offs,
+            block_tables=block_tables, lens=lens)
+
+    h, k_pool, v_pool = _run_layers_paged(params, cfg, h, k_pool, v_pool,
+                                          attn)
+    logits = _head(params, cfg, h)                 # (slots, 1, V)
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return next_tok, k_pool, v_pool
 
 
 def classify(params, cfg: ModelConfig, tokens, lengths):

@@ -18,7 +18,8 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 from repro.core import chunking
 from repro.core.kv_transfer import NetworkStack, TS_NVLINK
@@ -62,7 +63,7 @@ class _Instance:
         self.flip = FlipMachine(role)
         # prefill facet
         self.psched = PrefillScheduler(sched_policy, sched_batch)
-        self.chunks: List[chunking.Chunk] = []
+        self.chunks: Deque[chunking.Chunk] = deque()
         self.reqs: Dict[str, Request] = {}
         # decode facet
         self.alloc = PagedAllocator(n_pages, page_size)
@@ -170,7 +171,7 @@ class DisaggSimulator:
         self._push(self._now + dur, "prefill_done", p.iid)
 
     def _on_prefill_done(self, p: _Instance):
-        chunk = p.chunks.pop(0)
+        chunk = p.chunks.popleft()
         dur = self.cost.prefill_time(self.chunk_size) \
             * self.cost.predictor_overhead(self.co_run)
         p.busy += dur

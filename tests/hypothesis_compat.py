@@ -1,0 +1,39 @@
+"""Soft dependency shim for ``hypothesis``.
+
+The property tests use hypothesis when it is installed; when it is not
+(the minimal CI image), the ``@given`` tests are collected but SKIPPED —
+instead of the whole module failing at import and taking its plain
+pytest tests down with it.
+
+Usage in a test module:
+
+    from hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+"""
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAS_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - depends on environment
+    HAS_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert stand-in: strategy constructors/combinators chain into
+        more stand-ins so module-level strategy definitions still parse."""
+
+        def __call__(self, *args, **kwargs):
+            return _Strategy()
+
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategy()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

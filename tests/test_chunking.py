@@ -1,6 +1,5 @@
 """Property tests for the paper's chunked prefill (core/chunking.py)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.core import chunking
 

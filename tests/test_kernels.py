@@ -90,6 +90,59 @@ def test_paged_decode_attention_sweep(dtype, b, h, kvh, hd, npages, page,
                          - exp.astype(jnp.float32)).max()) < tol
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,h,kvh,hd,npages,page,nslots,bq", [
+    (3, 32, 4, 2, 64, 10, 16, 4, 16),    # GQA, ragged offsets
+    (1, 16, 4, 4, 32, 6, 16, 3, 16),     # MHA
+    (2, 64, 8, 1, 64, 12, 32, 4, 32),    # MQA, bigger pages
+])
+def test_paged_prefill_attention_sweep(dtype, b, sq, h, kvh, hd, npages,
+                                       page, nslots, bq):
+    """The fused-chunk serving kernel: per-segment q_offset/kv_len over a
+    block-table-addressed page pool."""
+    q = _mk((b, sq, h, hd), dtype, 21)
+    kp = _mk((npages, page, kvh, hd), dtype, 22)
+    vp = _mk((npages, page, kvh, hd), dtype, 23)
+    bt = jax.random.randint(jax.random.fold_in(KEY, 24), (b, nslots), 0,
+                            npages)
+    maxlen = nslots * page
+    q_off = jax.random.randint(jax.random.fold_in(KEY, 25), (b,), 0,
+                               maxlen - sq + 1)
+    kv_len = jnp.minimum(q_off + sq, maxlen)
+    out = ops.prefill_attention(q, kp, vp, kv_len, q_off, block_table=bt,
+                                block_q=bq)
+    exp = ref.ref_paged_prefill_attention(q, kp, vp, bt, kv_len, q_off)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert out.shape == exp.shape
+    assert not bool(jnp.isnan(out.astype(jnp.float32)).any())
+    assert float(jnp.abs(out.astype(jnp.float32)
+                         - exp.astype(jnp.float32)).max()) < tol
+
+
+def test_paged_prefill_matches_dense_prefill_kernel():
+    """Paged and dense prefill kernels agree when the pool pages hold the
+    same K/V the dense cache holds."""
+    b, sq, h, kvh, hd, page, nslots = 2, 32, 4, 2, 64, 16, 4
+    skv = nslots * page
+    q = _mk((b, sq, h, hd), jnp.float32, 26)
+    k = _mk((b, skv, kvh, hd), jnp.float32, 27)
+    v = _mk((b, skv, kvh, hd), jnp.float32, 28)
+    # lay the dense caches out in a pool: request i -> pages [4i, 4i+4)
+    kp = k.reshape(b * nslots, page, kvh, hd)
+    vp = v.reshape(b * nslots, page, kvh, hd)
+    bt = jnp.arange(b * nslots, dtype=jnp.int32).reshape(b, nslots)
+    q_off = jnp.array([skv - sq, 11], jnp.int32)
+    kv_len = q_off + sq
+    out_paged = ops.prefill_attention(q, kp, vp, kv_len, q_off,
+                                      block_table=bt, block_q=16)
+    # dense kernel takes a single shared q_offset -> compare per request
+    for i in range(b):
+        out_dense = ops.prefill_attention(
+            q[i:i + 1], k[i:i + 1], v[i:i + 1], kv_len[i:i + 1],
+            q_off[i:i + 1], block_q=16, block_kv=page)
+        assert float(jnp.abs(out_paged[i] - out_dense[0]).max()) < 2e-5
+
+
 def test_paged_decode_single_token_cache():
     """lens=1: only the first token of the first page is live."""
     q = _mk((1, 4, 64), jnp.float32, 15)

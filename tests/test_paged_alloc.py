@@ -1,7 +1,6 @@
 """Paged-KV allocator invariants (hypothesis-driven random workload)."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.kvcache.paged import OutOfPages, PagedAllocator, PagePool
 

@@ -1,0 +1,229 @@
+"""Paged serving path ≡ dense path: fused chunk prefill, paged decode,
+and the full prefill→transfer→decode round trip through both engines.
+
+The paged backend is a systems transformation (shared page pool + Pallas
+kernels instead of per-request dense caches) — it must not change a
+single emitted token.
+"""
+import copy
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.decode_engine import DecodeEngine
+from repro.core.kv_transfer import NetworkStack
+from repro.core.prefill_engine import PrefillEngine
+from repro.kvcache.paged import PagePool
+from repro.models import model as M
+from repro.runtime.workload import generate
+
+PAGE = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                              dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _drain_prefill(pe, reqs):
+    for r in reqs:
+        pe.submit(r)
+    out, t = {}, 0.0
+    for _ in range(200):
+        for pk in pe.step(t):
+            out[pk.req.rid] = pk
+        t += 0.01
+        if pe.idle():
+            break
+    return out
+
+
+def test_fused_chunk_prefill_matches_per_segment_dense(setup):
+    """One fused call per multi-segment chunk ≡ one dense model call per
+    segment: same first tokens AND same KV contents."""
+    cfg, params = setup
+    reqs = generate("LPLD", 4, seed=11, max_prompt=30, max_decode=4,
+                    vocab_size=cfg.vocab_size)
+    kw = dict(chunk_size=8, max_seq=64)
+    pe_paged = PrefillEngine("pp", cfg, params, backend="paged",
+                             page_size=PAGE, n_pages=128, **kw)
+    pe_dense = PrefillEngine("pd", cfg, params, backend="dense", **kw)
+    out_p = _drain_prefill(pe_paged, copy.deepcopy(reqs))
+    out_d = _drain_prefill(pe_dense, copy.deepcopy(reqs))
+    assert len(out_p) == len(out_d) == 4
+    # each chunk step — even multi-segment ones — was exactly ONE fused
+    # model call
+    assert pe_paged.fused_calls == pe_paged.chunk_steps > 0
+    for rid, pkp in out_p.items():
+        pkd = out_d[rid]
+        assert pkp.first_token == pkd.first_token
+        plen = pkp.req.prompt_len
+        # paged payload: (L, n_pages, page, kvh, hd) -> (L, plen, kvh, hd)
+        kp = np.asarray(pkp.pages_k).reshape(
+            cfg.n_layers, -1, cfg.n_kv_heads, cfg.resolved_head_dim)
+        vp = np.asarray(pkp.pages_v).reshape(
+            cfg.n_layers, -1, cfg.n_kv_heads, cfg.resolved_head_dim)
+        # dense payload: body cache leaves (n_repeats, 1, max_seq, kvh, hd)
+        kd = np.asarray(pkd.cache["body"][0]["k"])[:, 0]
+        vd = np.asarray(pkd.cache["body"][0]["v"])[:, 0]
+        assert np.abs(kp[:, :plen] - kd[:, :plen]).max() < 1e-4
+        assert np.abs(vp[:, :plen] - vd[:, :plen]).max() < 1e-4
+
+
+def test_paged_decode_matches_dense_over_ragged_multipage(setup):
+    """decode_step_paged over multi-page sequences with ragged lengths
+    emits the same tokens as the dense decode_step."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    kvh, hd, L = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_layers
+    slots, max_seq, trash = 3, 32, 16
+    lens = [11, 6, 1]                       # 3, 2 and 1 pages at PAGE=4
+    tables = {0: [0, 1, 2], 1: [3, 4], 2: [5]}
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+
+    # dense: per-request prefill, slot-batched cache
+    cache = M.init_cache(cfg, slots, max_seq)
+    first = []
+    for i, toks in enumerate(prompts):
+        c = M.init_cache(cfg, 1, max_seq)
+        lg, c = M.prefill(params, cfg, jnp.asarray(toks[None]), c)
+        cache = M.cache_insert(cache, c, i)
+        first.append(int(jnp.argmax(lg[0, -1])))
+
+    # paged: seed the pool with the same prompts via prefill_paged
+    pool = PagePool.create(L, trash + 1, PAGE, kvh, hd, jnp.float32)
+    for i, toks in enumerate(prompts):
+        n = len(toks)
+        sq = 1 << max(0, n - 1).bit_length()
+        tok = np.zeros((1, sq), np.int32)
+        tok[0, :n] = toks
+        tab = tables[i]
+        bt = np.full((1, 8), trash, np.int32)
+        bt[0, :len(tab)] = tab
+        pg = np.full((1, sq), trash, np.int32)
+        off = (np.arange(sq, dtype=np.int32) % PAGE)[None]
+        for j in range(n):
+            pg[0, j] = tab[j // PAGE]
+            off[0, j] = j % PAGE
+        nxt, _, kp, vp = M.prefill_paged(
+            params, cfg, jnp.asarray(tok), jnp.zeros(1, jnp.int32),
+            jnp.asarray([n], np.int32), jnp.asarray([n - 1], np.int32),
+            jnp.asarray(bt), jnp.asarray(pg), jnp.asarray(off),
+            pool.k, pool.v)
+        pool = PagePool(k=kp, v=vp)
+        assert int(nxt[0]) == first[i]
+
+    last_p, last_d = list(first), list(first)
+    cur = list(lens)
+    free_page = 6
+    for _ in range(4):
+        pos = np.asarray(cur, np.int32)
+        pages = np.zeros(slots, np.int32)
+        offs = pos % PAGE
+        bt = np.full((slots, 8), trash, np.int32)
+        for i in range(slots):
+            tab = tables[i]
+            if cur[i] >= len(tab) * PAGE:       # grow page-at-a-time
+                tab.append(free_page)
+                free_page += 1
+            pages[i] = tab[cur[i] // PAGE]
+            bt[i, :len(tab)] = tab
+        toks = np.asarray(last_p, np.int32)[:, None]
+        nxt, kp, vp = M.decode_step_paged(
+            params, cfg, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(bt),
+            jnp.asarray(pos + 1), pool.k, pool.v)
+        pool = PagePool(k=kp, v=vp)
+        lg, cache = M.decode_step(
+            params, cfg, jnp.asarray(np.asarray(last_d)[:, None]),
+            cache, jnp.asarray(pos))
+        dn = np.asarray(jnp.argmax(lg[:, 0], axis=-1))
+        assert np.asarray(nxt).tolist() == dn.tolist()
+        last_p = np.asarray(nxt).tolist()
+        last_d = dn.tolist()
+        cur = [c + 1 for c in cur]
+
+
+def _run_disagg(cfg, params, reqs, backend):
+    pe = PrefillEngine("p0", cfg, params, chunk_size=8, max_seq=64,
+                       backend=backend, page_size=PAGE, n_pages=128)
+    de = DecodeEngine("d0", cfg, params, max_slots=4, max_seq=64,
+                      backend=backend, page_size=PAGE, n_pages=128)
+    for r in reqs:
+        pe.submit(r)
+    out, t = {}, 0.0
+    for _ in range(2000):
+        for pk in pe.step(t):
+            de.receive(pk)
+        de.admit(t)
+        for f in de.step(t):
+            out[f.req.rid] = f.tokens
+        t += 0.01
+        if pe.idle() and de.idle():
+            break
+    return out
+
+
+def test_roundtrip_paged_vs_dense_engines(setup):
+    """prefill→transfer→decode through both engine backends: identical
+    token streams for every request."""
+    cfg, params = setup
+    reqs = generate("Mixed", 5, seed=12, max_prompt=24, max_decode=6,
+                    vocab_size=cfg.vocab_size)
+    out_p = _run_disagg(cfg, params, copy.deepcopy(reqs), "paged")
+    out_d = _run_disagg(cfg, params, copy.deepcopy(reqs), "dense")
+    assert len(out_p) == len(out_d) == 5
+    assert out_p == out_d
+
+
+def test_prefill_page_backpressure(setup):
+    """A pool too small for the whole scheduler batch defers requests at
+    the queue head instead of crashing; everything still completes as
+    pages free up."""
+    cfg, params = setup
+    reqs = generate("LPLD", 4, seed=13, max_prompt=30, max_decode=2,
+                    vocab_size=cfg.vocab_size)
+    # pages for ~1 request at a time (max_prompt 30 -> <=8 pages @ PAGE=4)
+    pe = PrefillEngine("p0", cfg, params, chunk_size=8, max_seq=64,
+                       backend="paged", page_size=PAGE, n_pages=10)
+    out = _drain_prefill(pe, reqs)
+    assert len(out) == 4
+    assert pe.alloc.used_pages == 0          # everything shipped + freed
+
+
+def test_kv_transfer_page_granularity(setup):
+    """Paged transfer accounting ships whole live pages: bytes round up
+    to the page boundary and never below the raw token payload."""
+    from repro.core.kv_transfer import kv_bytes, kv_page_bytes
+    cfg, _ = setup
+    assert kv_page_bytes(cfg, 16, 16) == kv_bytes(cfg, 16)
+    assert kv_page_bytes(cfg, 17, 16) == kv_bytes(cfg, 32)
+    assert kv_page_bytes(cfg, 1, 16) == kv_bytes(cfg, 16)
+    net = NetworkStack()
+    d = net.send_kv(cfg, 17, page_size=16)
+    assert net.bytes_sent == kv_bytes(cfg, 32)
+    assert d > 0
+
+
+def test_pool_gather_install_roundtrip():
+    """PagePool.gather on one pool == the transfer payload a second pool
+    installs — the page-granular KV handoff is lossless."""
+    pool_a = PagePool.create(2, 8, PAGE, 2, 16, jnp.float32)
+    k = jnp.arange(2 * 3 * PAGE * 2 * 16, dtype=jnp.float32).reshape(
+        2, 3, PAGE, 2, 16)
+    pool_a = PagePool(k=pool_a.k.at[:, jnp.asarray([1, 4, 6])].set(k),
+                      v=pool_a.v.at[:, jnp.asarray([1, 4, 6])].set(2 * k))
+    pk, pv = pool_a.gather([1, 4, 6])
+    pool_b = PagePool.create(2, 8, PAGE, 2, 16, jnp.float32)
+    pool_b = pool_b.install([0, 2, 5], pk, pv)
+    bk, bv = pool_b.gather([0, 2, 5])
+    assert jnp.array_equal(bk, k)
+    assert jnp.array_equal(bv, 2 * k)

@@ -1,6 +1,5 @@
 """Scheduler property tests: prefill policies, dispatcher, decode admission."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.core.sched.decode_scheduler import DecodeScheduler
 from repro.core.sched.dispatcher import DecodeLoad, Dispatcher

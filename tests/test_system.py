@@ -53,7 +53,7 @@ def _run_disagg(cfg, params, reqs, policy="greedy", chunk=16):
     out, t = {}, 0.0
     for _ in range(3000):
         for pk in pe.step(t):
-            de.receive(pk.req, pk.cache, pk.first_token)
+            de.receive(pk)
         de.admit(t)
         for f in de.step(t):
             out[f.req.rid] = f.tokens
