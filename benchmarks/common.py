@@ -1,5 +1,4 @@
 """Shared helpers for the paper-figure benchmarks."""
-import copy
 import time
 
 from repro.configs import get_config

@@ -22,7 +22,6 @@ def run():
             r = sim.run(copy.deepcopy(reqs0))
             dec_busy = [i.busy for i in sim.instances
                         if i.flip.role == Role.DECODE]
-            slowest = max(range(len(dec_busy)), key=lambda i: dec_busy[i])
             rows.append((
                 f"fig19_{policy}_n={n_dec}",
                 (time.perf_counter()-t0)*1e6,

@@ -1,18 +1,24 @@
 """Dense vs paged serving-engine microbenchmark (perf trajectory anchor).
 
 Runs the SAME small workload through the real-execution disaggregated
-engines twice — legacy dense backend vs the paged backend (fused chunk
-prefill through the Pallas kernels + pool-based decode) — and reports
-wall time, per-phase call counts and KV wire bytes as JSON, plus the
-harness CSV rows.
+engines twice per scenario — legacy dense backend vs the paged backend
+(fused chunk prefill through the Pallas kernels + pool-based decode) —
+and reports wall time, per-phase call counts and KV wire bytes as JSON,
+plus the harness CSV rows.  Three scenarios cover every paged layout:
+
+  * ``gqa``      — full attention, per-head K/V pages (qwen2)
+  * ``windowed`` — sliding-window attention; the allocator frees pages
+                   that slide out of the window (mistral-nemo, w=6)
+  * ``mla``      — DeepSeek-V2 latent pages + Pallas paged-MLA decode
 
 NOTE: on CPU the Pallas kernels execute in ``interpret=True`` mode, so
 absolute wall times here track dispatch/bookkeeping, not kernel speed —
 the JSON exists to anchor the perf trajectory (same workload, both
 backends, token-identical) across PRs and to be re-run on real TPUs.
 
-    PYTHONPATH=src python -m benchmarks.paged_serving
+    PYTHONPATH=src python -m benchmarks.paged_serving [--out BENCH.json]
 """
+import argparse
 import copy
 import dataclasses
 import json
@@ -66,33 +72,57 @@ def _serve(cfg, params, reqs, backend):
     }
 
 
-def run():
-    cfg = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+def _scenarios():
+    gqa = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
                               dtype="float32")
-    params = M.init_params(jax.random.PRNGKey(0), cfg)
-    reqs = generate("Mixed", 6, seed=7, max_prompt=32, max_decode=6,
-                    vocab_size=cfg.vocab_size)
-    dense = _serve(cfg, params, copy.deepcopy(reqs), "dense")
-    paged = _serve(cfg, params, copy.deepcopy(reqs), "paged")
-    identical = dense.pop("outputs_digest") == paged.pop("outputs_digest")
-    report = {
-        "model": cfg.name,
-        "dense": dense,
-        "paged": paged,
-        "token_identical": identical,
-        "speedup": round(dense["wall_s"] / paged["wall_s"], 3),
-    }
-    print(json.dumps(report))
+    windowed = dataclasses.replace(get_smoke_config("mistral_nemo_12b"),
+                                   dtype="float32", sliding_window=6)
+    mla = dataclasses.replace(get_smoke_config("deepseek_v2_236b"),
+                              dtype="float32")
+    return [("gqa", gqa, 6, 6), ("windowed", windowed, 4, 6),
+            ("mla", mla, 4, 5)]
+
+
+def run(out_path=None):
+    report = {}
     rows = []
-    for r in (dense, paged):
-        rows.append((f"paged_serving_{r['backend']}",
-                     r["wall_s"] * 1e6 / max(1, r["decode_iterations"]),
-                     f"wall_s={r['wall_s']};tok_s={r['tok_per_s']};"
-                     f"kv_bytes={r['kv_bytes_sent']};"
-                     f"identical={identical}"))
-    assert identical, "paged backend changed emitted tokens"
+    for name, cfg, n_reqs, max_dec in _scenarios():
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        reqs = generate("Mixed", n_reqs, seed=7, max_prompt=32,
+                        max_decode=max_dec, vocab_size=cfg.vocab_size)
+        dense = _serve(cfg, params, copy.deepcopy(reqs), "dense")
+        paged = _serve(cfg, params, copy.deepcopy(reqs), "paged")
+        identical = dense.pop("outputs_digest") \
+            == paged.pop("outputs_digest")
+        report[name] = {
+            "model": cfg.name,
+            "window": cfg.sliding_window,
+            "dense": dense,
+            "paged": paged,
+            "token_identical": identical,
+            "speedup": round(dense["wall_s"] / paged["wall_s"], 3),
+            "kv_bytes_ratio": round(
+                paged["kv_bytes_sent"] / max(1, dense["kv_bytes_sent"]),
+                3),
+        }
+        for r in (dense, paged):
+            rows.append((f"paged_serving_{name}_{r['backend']}",
+                         r["wall_s"] * 1e6
+                         / max(1, r["decode_iterations"]),
+                         f"wall_s={r['wall_s']};tok_s={r['tok_per_s']};"
+                         f"kv_bytes={r['kv_bytes_sent']};"
+                         f"identical={identical}"))
+        assert identical, f"paged backend changed emitted tokens ({name})"
+    print(json.dumps(report))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
     return emit(rows)
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this path "
+                         "(CI uploads it as the BENCH_* artifact)")
+    run(ap.parse_args().out)

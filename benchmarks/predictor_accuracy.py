@@ -5,7 +5,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_smoke_config

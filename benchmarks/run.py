@@ -1,8 +1,9 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness: one module per paper figure/table (DESIGN.md §6).
 
-``python -m benchmarks.run``            — run everything
+``python -m benchmarks.run``             — run everything
 ``python -m benchmarks.run fig16 fig18`` — run a subset by prefix
+``python -m benchmarks.run --list``      — list registered benchmarks
 """
 import sys
 import traceback
@@ -33,6 +34,10 @@ ALL = [
 
 def main() -> None:
     wanted = sys.argv[1:]
+    if "--list" in wanted:
+        for name, _ in ALL:
+            print(name)
+        return
     print("name,us_per_call,derived")
     failures = []
     for name, fn in ALL:

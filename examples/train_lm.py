@@ -8,13 +8,11 @@ configuration for real hardware.
     PYTHONPATH=src python examples/train_lm.py [--steps 200]
 """
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
 from repro.models import model as M
 from repro.models.config import ATTN, ModelConfig
 from repro.train import data as D

@@ -1,0 +1,67 @@
+"""Single source of truth for execution-backend selection.
+
+Both serving engines (``PrefillEngine``/``DecodeEngine``) resolve their
+execution backend through ``backend_for`` — there is exactly ONE place
+that decides which architectures run the paged fast path, what the page
+pool holds for them, and how many bytes a pool token puts on the wire.
+``docs/backends.md`` renders the resulting matrix.
+
+Layouts:
+  * ``gqa``    — paged; pool pages hold per-head K/V
+                 (2 * n_kv_heads * head_dim per token).
+  * ``latent`` — paged; pool pages hold the compressed MLA latent
+                 (kv_lora_rank + qk_rope_head_dim per token) — the
+                 payload disaggregation ships is ~an order of magnitude
+                 smaller than full GQA KV.
+  * ``dense``  — per-request dense cache pytrees; the fallback for
+                 recurrent/hybrid, encoder-decoder and mixed-pattern
+                 architectures (and the substrate for training and the
+                 coupled vLLM-style baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Resolved execution backend for one model config."""
+    backend: str            # "paged" | "dense"
+    layout: str             # "gqa" | "latent" | "dense"
+    window: int             # sliding window in tokens (0 = unlimited)
+    token_width: int        # pool scalars per token per layer
+    page_token_bytes: int   # wire/pool bytes per token per layer
+
+    @property
+    def paged(self) -> bool:
+        return self.backend == "paged"
+
+
+def backend_for(cfg: ModelConfig, requested: str = "auto") -> BackendSpec:
+    """Resolve the execution backend for ``cfg``.
+
+    ``auto`` picks paged whenever the config supports it; explicitly
+    asking for paged on an unsupported arch is a loud error.
+    """
+    assert requested in ("auto", "paged", "dense"), requested
+    supported = M.paged_supported(cfg)
+    if requested == "paged" and not supported:
+        raise ValueError(f"{cfg.name}: paged backend unsupported")
+    backend = ("paged" if requested in ("auto", "paged") and supported
+               else "dense")
+    dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
+    if backend == "paged" and cfg.mla is not None:
+        layout = "latent"
+        width = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+    elif backend == "paged":
+        layout = "gqa"
+        width = 2 * cfg.n_kv_heads * cfg.resolved_head_dim
+    else:
+        layout = "dense"
+        width = 0
+    return BackendSpec(backend=backend, layout=layout,
+                       window=cfg.sliding_window, token_width=width,
+                       page_token_bytes=width * dtype_bytes)

@@ -6,16 +6,18 @@ static shapes) with a validity mask; the admission policy (greedy /
 reserve-static / reserve-dynamic) decides which queued requests join each
 iteration against the paged-KV allocator.
 
-Execution backends:
-  * ``paged`` (default for pure-attention archs) — K/V lives in a shared
-    device ``PagePool``; admission INSTALLS the received page contents
-    and a block-table row (no dense ``cache_insert`` copy), every
-    iteration runs the full slot batch through the Pallas paged-decode
-    kernel, block tables grow page-at-a-time via the allocator's
-    ``append_token``, and argmax stays on device (one int per slot
-    crosses to host).
+Execution backends (selected by ``core.backend.backend_for``):
+  * ``paged`` (default for every uniform-attention arch: GQA, MLA
+    latent, full or sliding-window) — K/V lives in a shared device
+    ``PagePool``; admission INSTALLS the received page contents and a
+    block-table row (no dense ``cache_insert`` copy), every iteration
+    runs the full slot batch through the Pallas paged-decode kernels,
+    block tables grow page-at-a-time via the allocator's
+    ``append_token`` — which also FREES pages that slide out of the
+    attention window, so windowed decode holds O(window) pages — and
+    argmax stays on device (one int per slot crosses to host).
   * ``dense`` — legacy (max_slots, max_seq) dense cache; retained for
-    recurrent / MLA / windowed architectures.
+    recurrent/hybrid, encoder-decoder and mixed-pattern architectures.
 """
 from __future__ import annotations
 
@@ -26,9 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backend import backend_for
 from repro.core.decode_types import FinishedRequest
-from repro.core.prefill_engine import (PrefilledKV, make_page_pool,
-                                       resolve_backend)
+from repro.core.prefill_engine import PrefilledKV, make_page_pool
 from repro.core.sched.decode_scheduler import DecodeScheduler
 from repro.kvcache.paged import PagedAllocator, PagePool
 from repro.models import model as M
@@ -54,10 +56,11 @@ class DecodeEngine:
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
-        self.alloc = PagedAllocator(n_pages=n_pages, page_size=page_size)
+        self.alloc = PagedAllocator(n_pages=n_pages, page_size=page_size,
+                                    window=cfg.sliding_window)
         self.scheduler = DecodeScheduler(self.alloc, policy=policy,
                                          max_batch=max_slots)
-        self.backend = resolve_backend(cfg, backend)
+        self.backend = backend_for(cfg, backend).backend
         self.page_size = page_size
         self.slots: Dict[int, SlotState] = {}
         self._pending: Dict[str, PrefilledKV] = {}
@@ -112,13 +115,15 @@ class DecodeEngine:
             if self.backend == "paged":
                 # stage the received pages for the pages the scheduler's
                 # admission just allocated; the block-table row is the
-                # allocator's table — no dense cache_insert copy
-                table = self.alloc.table(req.rid)
+                # allocator's table — no dense cache_insert copy.  For
+                # windowed configs both sides hold only the in-window
+                # live pages, so the counts line up by construction.
+                live = self.alloc.live_pages(req.rid)
                 assert pk.pages_k is not None and \
-                    pk.pages_k.shape[1] == len(table), \
+                    pk.pages_k.shape[1] == len(live), \
                     "paged decode engine needs a page-granular payload " \
                     "from a paged prefill engine with the same page_size"
-                pages.extend(table)
+                pages.extend(live)
                 payload_k.append(pk.pages_k)
                 payload_v.append(pk.pages_v)
             else:
@@ -177,7 +182,7 @@ class DecodeEngine:
             toks[s, 0] = st.last_token
             pos[s] = p
             offs[s] = p % ps
-            table = self.alloc.table(st.req.rid)
+            table = self.alloc.table_padded(st.req.rid, trash)
             bt[s, :len(table)] = table
             lens[s] = p + 1
         nxt, kp, vp = self._decode_paged(

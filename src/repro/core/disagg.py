@@ -14,12 +14,9 @@ cross-pod collective schedule) lowers and fits.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 from jax.experimental.shard_map import shard_map
 
 from repro.models import model as M

@@ -23,8 +23,8 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
 
+from repro.kvcache.paged import window_dead_pages
 from repro.models.config import ModelConfig
 
 
@@ -55,10 +55,18 @@ TS_ICI = LinkSpec(LinkType.DIRECT, 50e9, 5e-6, True)
 def kv_page_bytes(cfg: ModelConfig, n_tokens: int, page_size: int,
                   dtype_bytes: int = 2) -> int:
     """Prefilled-KV payload at PAGE granularity: the paged engines ship
-    whole live pages (ceil(n_tokens / page_size) of them), so the wire
-    bytes are the page contents, not the raw token count — this is the
-    unit the paper's per-chunk streamed transfer accounts in."""
-    pages = -(-max(1, n_tokens) // page_size)
+    whole LIVE pages, so the wire bytes are the page contents, not the
+    raw token count — this is the unit the paper's per-chunk streamed
+    transfer accounts in.  Sliding-window configs only ship the
+    in-window page suffix (pages that slid wholly out are freed, never
+    transferred); MLA configs' per-token width is the compressed latent
+    (via ``kv_bytes_per_token``), so latent pages are ~14x narrower."""
+    n = max(1, n_tokens)
+    pages = -(-n // page_size)
+    # same dead-page arithmetic the allocator frees by; at least one
+    # live page always ships (the allocator clamps identically)
+    pages = max(1, pages - window_dead_pages(n, cfg.sliding_window,
+                                             page_size))
     return kv_bytes(cfg, pages * page_size, dtype_bytes)
 
 

@@ -13,8 +13,7 @@ Two implementations share an interface:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

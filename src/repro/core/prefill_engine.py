@@ -5,15 +5,19 @@ Real-execution engine: runs the actual JAX model on CPU (tiny configs in
 tests/examples).  Cluster-scale behaviour is reproduced by the simulator
 (runtime/simulator.py) with the same scheduler/dispatcher objects.
 
-Execution backends:
-  * ``paged`` (default for pure-attention archs) — the engine owns a
-    device ``PagePool``; one ``step`` executes the WHOLE fixed-size chunk
-    as a single fused ``model.prefill_paged`` call (segments of multiple
-    requests packed on the batch dim), writing K/V straight into pages.
-    Finished requests ship ``(block table, page contents)`` — no dense
+Execution backends (selected by ``core.backend.backend_for``):
+  * ``paged`` (default for every uniform-attention arch: GQA, MLA
+    latent, full or sliding-window) — the engine owns a device
+    ``PagePool``; one ``step`` executes the WHOLE fixed-size chunk as a
+    single fused ``model.prefill_paged`` call (segments of multiple
+    requests packed on the batch dim), writing K/V — or the compressed
+    MLA latent — straight into pages.  Sliding-window configs trim
+    pages back to the free list as chunks slide past them.  Finished
+    requests ship ``(block table, live page contents)`` — no dense
     cache pytree ever exists on this path.
   * ``dense`` — legacy per-segment ``model.prefill`` against per-request
-    dense caches; retained for recurrent / MLA / windowed architectures.
+    dense caches; retained for recurrent/hybrid, encoder-decoder and
+    mixed-pattern architectures.
 """
 from __future__ import annotations
 
@@ -26,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import chunking
+from repro.core.backend import backend_for
 from repro.core.kv_transfer import NetworkStack
 from repro.core.sched.dispatcher import Dispatcher
 from repro.core.sched.prefill_scheduler import PrefillScheduler
@@ -39,10 +44,13 @@ from repro.runtime.request import Phase, Request
 class PrefilledKV:
     """What the dispatcher ships to a decode instance.
 
-    Paged backend: ``pages_k``/``pages_v`` hold the request's page
-    contents, shape (L, n_pages, page, kvh, hd), plus ``kv_len`` valid
-    tokens — the receiver installs them into its own pool and builds a
-    block-table row.  Dense backend: ``cache`` is a batch=1 cache pytree.
+    Paged backend: ``pages_k``/``pages_v`` hold the request's LIVE page
+    contents — (L, n_pages, page, kvh, hd) for the GQA layout, or the
+    (latent, rope-key) pair (L, n_pages, page, width) for MLA — plus
+    ``kv_len`` valid tokens.  The receiver installs them into its own
+    pool and builds a block-table row; for sliding-window configs the
+    payload is only the O(window) in-window suffix.  Dense backend:
+    ``cache`` is a batch=1 cache pytree.
     """
     req: Request
     first_token: int             # argmax token from prefill (the 'first token')
@@ -58,25 +66,21 @@ def _pow2(n: int) -> int:
     return 1 << max(0, n - 1).bit_length()
 
 
-def resolve_backend(cfg: ModelConfig, backend: str) -> str:
-    """Shared engine backend selection: ``auto`` picks paged whenever the
-    config supports it; explicitly asking for paged on an unsupported
-    arch is a loud error."""
-    assert backend in ("auto", "paged", "dense"), backend
-    if backend == "auto":
-        return "paged" if M.paged_supported(cfg) else "dense"
-    if backend == "paged" and not M.paged_supported(cfg):
-        raise ValueError(f"{cfg.name}: paged backend unsupported")
-    return backend
-
-
 def make_page_pool(cfg: ModelConfig, n_pages: int, page_size: int):
     """Device pool with one extra physical page past the allocator's
     range — the scratch ("trash") page pad tokens and dead slots scatter
-    to.  Returns (pool, trash_page_id)."""
-    pool = PagePool.create(cfg.n_layers, n_pages + 1, page_size,
-                           cfg.n_kv_heads, cfg.resolved_head_dim,
-                           dtype=jnp.dtype(cfg.dtype))
+    to.  MLA configs get the latent layout (compressed latent + RoPE key
+    pages); everything else per-head GQA K/V pages.
+    Returns (pool, trash_page_id)."""
+    dtype = jnp.dtype(cfg.dtype)
+    if backend_for(cfg).layout == "latent":
+        pool = PagePool.create_latent(
+            cfg.n_layers, n_pages + 1, page_size, cfg.mla.kv_lora_rank,
+            cfg.mla.qk_rope_head_dim, dtype=dtype)
+    else:
+        pool = PagePool.create(cfg.n_layers, n_pages + 1, page_size,
+                               cfg.n_kv_heads, cfg.resolved_head_dim,
+                               dtype=dtype)
     return pool, n_pages
 
 
@@ -98,7 +102,7 @@ class PrefillEngine:
         self.predictor = predictor
         self.chunk_size = chunk_size
         self.max_seq = max_seq
-        self.backend = resolve_backend(cfg, backend)
+        self.backend = backend_for(cfg, backend).backend
         self.page_size = page_size
         self._chunk_queue: Deque[chunking.Chunk] = collections.deque()
         self._reqs: Dict[str, Request] = {}
@@ -107,7 +111,8 @@ class PrefillEngine:
 
         if self.backend == "paged":
             self.alloc = PagedAllocator(n_pages=n_pages,
-                                        page_size=page_size)
+                                        page_size=page_size,
+                                        window=cfg.sliding_window)
             self.pool, self._trash = make_page_pool(cfg, n_pages,
                                                     page_size)
             self._bt_width = self.alloc.pages_for(max_seq)
@@ -151,14 +156,18 @@ class PrefillEngine:
         if not batch:
             return
         if self.backend == "paged":
-            # reserve each request's prompt pages up front (the fused
-            # chunk calls scatter into them); requests that don't fit the
-            # pool right now go back to the head of the queue —
-            # backpressure instead of an OutOfPages crash mid-batch
+            # reserve each request's prompt pages up front — prefill
+            # writes every prompt position, so ALL pages materialize
+            # (windowed configs trim them back to the free list as
+            # chunks slide past); requests that don't fit the pool right
+            # now go back to the head of the queue — backpressure
+            # instead of an OutOfPages crash mid-batch
             fit, defer = [], []
             for r in batch:
-                if self.alloc.can_admit(r.prompt_len):
-                    self.alloc.alloc(r.rid, r.prompt_len)
+                if self.alloc.can_admit(r.prompt_len,
+                                        materialize_all=True):
+                    self.alloc.alloc(r.rid, r.prompt_len,
+                                     materialize_all=True)
                     fit.append(r)
                 else:
                     if self.alloc.pages_for(max(1, r.prompt_len)) \
@@ -221,10 +230,11 @@ class PrefillEngine:
             qoff[i] = seg.req_start
             kvlen[i] = seg.req_start + seg.length
             last[i] = seg.length - 1
-            table = self.alloc.table(seg.rid)
+            table = np.asarray(self.alloc.table_padded(seg.rid, trash),
+                               np.int32)
             bt[i, :len(table)] = table
             pos = seg.req_start + np.arange(seg.length)
-            pg[i, :seg.length] = np.asarray(table)[pos // ps]
+            pg[i, :seg.length] = table[pos // ps]
             off[i, :seg.length] = pos % ps
         next_tok, _, kp, vp = self._prefill_paged(
             self.params, jnp.asarray(toks), jnp.asarray(qoff),
@@ -237,6 +247,9 @@ class PrefillEngine:
         for i, seg in enumerate(segs):
             req = self._reqs[seg.rid]
             req.prefilled = seg.req_start + seg.length
+            # windowed: pages the processed prefix slid past go back to
+            # the free list (no-op for unwindowed configs)
+            self.alloc.trim(seg.rid, req.prefilled)
             if req.prefilled >= req.prompt_len:
                 finished.append(
                     self._finish_paged(req, int(next_tok[i]), now))
@@ -249,7 +262,10 @@ class PrefillEngine:
                                      n_chunks=n_chunks,
                                      page_size=self.page_size)
         req.phase = Phase.TRANSFER
-        pages_k, pages_v = self.pool.gather(self.alloc.table(req.rid))
+        # ship the LIVE pages only: for windowed configs that is the
+        # O(window) in-window suffix, exactly what the decode side's
+        # window-aware allocator will hold for this request
+        pages_k, pages_v = self.pool.gather(self.alloc.live_pages(req.rid))
         self.alloc.free(req.rid)
         self._reqs.pop(req.rid)
         return PrefilledKV(req=req, first_token=first_tok,

@@ -15,7 +15,7 @@ Continuous batching admission policies against the paged KV allocator:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.kvcache.paged import PagedAllocator
 from repro.runtime.request import Request
@@ -48,7 +48,10 @@ class DecodeScheduler:
         self.queue.append(req)
 
     def _pages_for_tokens(self, tokens: int) -> int:
-        return self.alloc.pages_for(max(1, tokens))
+        # window-aware: a sliding-window request only ever HOLDS the
+        # in-window pages, so admission budgets against that, not the
+        # full logical length
+        return self.alloc.pages_for_request(max(1, tokens))
 
     def _admissible(self, req: Request) -> bool:
         """Policy decision. The request's prefilled KV (prompt_len tokens)
@@ -66,7 +69,7 @@ class DecodeScheduler:
             for rid, ri in self.running.items():
                 r_hi = ri.req.predicted_hi or ri.req.decode_len
                 full = self._pages_for_tokens(ri.req.prompt_len + r_hi)
-                held = len(self.alloc.table(rid))
+                held = self.alloc.pages_held(rid)
                 committed += max(0, full - held)
             return self.alloc.free_pages >= total + committed
         # reserve-dynamic

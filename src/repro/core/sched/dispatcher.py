@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import random as _random
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 POLICIES = ("power2", "random", "imbalance")
 

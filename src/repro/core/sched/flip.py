@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
 
 FLIP_LATENCY_S = 0.006
 

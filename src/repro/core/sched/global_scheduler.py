@@ -4,7 +4,7 @@ and instance flip (§3.5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 from repro.core.sched.dispatcher import DecodeLoad
 from repro.runtime.request import Phase, Request

@@ -7,7 +7,7 @@ starvation of long (SJF) or short (LJF) prompts.
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, List
 
 from repro.runtime.request import Request
 

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
 from repro.kernels.paged_decode_attention import paged_decode_attention
+from repro.kernels.paged_mla_decode_attention import paged_mla_decode_attention
 from repro.kernels.paged_prefill_attention import paged_prefill_attention
 
 
@@ -50,7 +51,18 @@ def prefill_attention(q, k_cache, v_cache, kv_len, q_offset, *,
         window=window, causal=causal, interpret=_interpret(), **kwargs)
 
 
-def decode_attention(q, k_pool, v_pool, block_table, lens):
+def decode_attention(q, k_pool, v_pool, block_table, lens, *,
+                     window: int = 0):
     return paged_decode_attention(
         q, k_pool, v_pool, block_table, jnp.asarray(lens),
-        interpret=_interpret())
+        window=window, interpret=_interpret())
+
+
+def mla_decode_attention(q_lat, q_rope, ckv_pool, kr_pool, block_table,
+                         lens, *, scale: float, window: int = 0):
+    """Absorbed MLA decode over the paged latent pool: scores/PV run in
+    the compressed latent space; the caller up-projects the returned
+    (b, h, lora) through W_uv."""
+    return paged_mla_decode_attention(
+        q_lat, q_rope, ckv_pool, kr_pool, block_table, jnp.asarray(lens),
+        scale=scale, window=window, interpret=_interpret())

@@ -30,7 +30,7 @@ def _kernel(block_table_ref, lens_ref,      # scalar prefetch
             q_ref, k_ref, v_ref,            # VMEM blocks
             o_ref,                          # VMEM out
             m_ref, l_ref, acc_ref,          # VMEM scratch
-            *, page_size: int, n_slots: int, rep: int):
+            *, page_size: int, n_slots: int, rep: int, window: int):
     bi = pl.program_id(0)
     pi = pl.program_id(1)
 
@@ -42,7 +42,14 @@ def _kernel(block_table_ref, lens_ref,      # scalar prefetch
 
     length = lens_ref[bi]
 
-    @pl.when(pi * page_size < length)
+    # skip pages past the valid length; with a sliding window also skip
+    # pages that slid wholly out of it (their table slots may point at
+    # freed/scratch pages — never read them)
+    live = pi * page_size < length
+    if window:
+        live = jnp.logical_and(live, (pi + 1) * page_size > length - window)
+
+    @pl.when(live)
     def _update():
         q = q_ref[0].astype(jnp.float32)                 # (h, hd)
         k = k_ref[0].astype(jnp.float32)                 # (page, kvh, hd)
@@ -56,7 +63,11 @@ def _kernel(block_table_ref, lens_ref,      # scalar prefetch
             preferred_element_type=jnp.float32) * (hd ** -0.5)
         tok = pi * page_size + jax.lax.broadcasted_iota(
             jnp.int32, (kvh, rep, page_size), 2)
-        s = jnp.where(tok < length, s, NEG_INF)
+        mask = tok < length
+        if window:
+            # the query sits at position length-1: keep k > q - window
+            mask = jnp.logical_and(mask, tok > length - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]                              # (kvh, rep)
         m_new = jnp.maximum(m_prev, s.max(axis=2))
         p = jnp.exp(s - m_new[..., None])
@@ -76,15 +87,16 @@ def _kernel(block_table_ref, lens_ref,      # scalar prefetch
         o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_decode_attention(
         q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
         block_table: jnp.ndarray, lens: jnp.ndarray, *,
-        interpret: bool = False) -> jnp.ndarray:
+        window: int = 0, interpret: bool = False) -> jnp.ndarray:
     """q: (b, h, hd); k_pool/v_pool: (n_pages, page, kvh, hd); block_table:
-    (b, n_slots) physical page ids (pad slots may repeat a live page — they
-    are masked by ``lens``); lens: (b,) tokens in cache per request.
-    Returns (b, h, hd_v)."""
+    (b, n_slots) physical page ids (pad slots and slots that slid out of
+    ``window`` may point at a scratch page — they are masked/skipped);
+    lens: (b,) tokens in cache per request; window: sliding window in
+    tokens (0 = unlimited).  Returns (b, h, hd_v)."""
     b, h, hd = q.shape
     n_pages, page_size, kvh, hd_v = v_pool.shape
     n_slots = block_table.shape[1]
@@ -108,7 +120,7 @@ def paged_decode_attention(
             pltpu.VMEM((kvh, rep, hd_v), jnp.float32),
         ])
     kern = functools.partial(_kernel, page_size=page_size, n_slots=n_slots,
-                             rep=rep)
+                             rep=rep, window=window)
     return pl.pallas_call(
         kern, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, hd_v), q.dtype),

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: paged MLA decode attention over the latent pool.
+
+DeepSeek-V2 multi-head latent attention in its *absorbed* decode form:
+queries are pre-absorbed through W_uk on the host side (``q_lat``), so
+the kernel scores directly against the compressed latent cache — per
+page it contracts (h, lora) x (page, lora) plus the decoupled RoPE term
+(h, rope) x (page, rope), and the online-softmax accumulator stays in
+the latent space (h, lora).  The caller up-projects the returned
+``o_lat`` through W_uv once, outside the page loop — the per-block
+"up-projection" is thereby folded into a single post-kernel einsum
+instead of decompressing any page to per-head K/V.
+
+The latent pool pages are (n_pages, page, kv_lora_rank) and
+(n_pages, page, rope) — ~an order of magnitude narrower than a dense
+GQA pool, which is exactly the payload the disaggregated KV transfer
+ships.  Block tables are scalar-prefetched like the GQA paged kernels:
+the BlockSpec index_map resolves the physical page per (request, slot)
+grid step and Pallas streams only live pages HBM->VMEM.
+
+Grid: (batch, n_page_slots) — page slots innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_table_ref, lens_ref,      # scalar prefetch
+            ql_ref, qr_ref, ckv_ref, kr_ref,  # VMEM blocks
+            o_ref,                          # VMEM out
+            m_ref, l_ref, acc_ref,          # VMEM scratch
+            *, page_size: int, n_slots: int, scale: float, window: int):
+    bi = pl.program_id(0)
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[bi]
+
+    live = pi * page_size < length
+    if window:
+        live = jnp.logical_and(live, (pi + 1) * page_size > length - window)
+
+    @pl.when(live)
+    def _update():
+        ql = ql_ref[0].astype(jnp.float32)               # (h, lora)
+        qr = qr_ref[0].astype(jnp.float32)               # (h, rope)
+        ckv = ckv_ref[0].astype(jnp.float32)             # (page, lora)
+        kr = kr_ref[0].astype(jnp.float32)               # (page, rope)
+        h = ql.shape[0]
+        # scores: (h, page) — latent content term + decoupled RoPE term
+        s = (jax.lax.dot_general(ql, ckv, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+             ) * scale
+        tok = pi * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (h, page_size), 1)
+        mask = tok < length
+        if window:
+            mask = jnp.logical_and(mask, tok > length - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                              # (h,)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        # o_lat accumulates in the latent space: (h, page) @ (page, lora)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, ckv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == n_slots - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_mla_decode_attention(
+        q_lat: jnp.ndarray, q_rope: jnp.ndarray,
+        ckv_pool: jnp.ndarray, kr_pool: jnp.ndarray,
+        block_table: jnp.ndarray, lens: jnp.ndarray, *,
+        scale: float, window: int = 0,
+        interpret: bool = False) -> jnp.ndarray:
+    """q_lat: (b, h, lora) W_uk-absorbed queries; q_rope: (b, h, rope);
+    ckv_pool: (n_pages, page, lora) compressed latent pages; kr_pool:
+    (n_pages, page, rope) decoupled-RoPE key pages; block_table:
+    (b, n_slots) physical page ids (pad/slid-out slots may point at a
+    scratch page — masked/skipped); lens: (b,) tokens in cache per
+    request.  ``scale`` is the softmax scale ((nope+rope)^-0.5).
+    Returns o_lat: (b, h, lora) — up-project through W_uv outside."""
+    b, h, lora = q_lat.shape
+    n_pages, page_size, rope = kr_pool.shape
+    n_slots = block_table.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_slots),
+        in_specs=[
+            pl.BlockSpec((1, h, lora), lambda bi, pi, bt, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, h, rope), lambda bi, pi, bt, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, page_size, lora),
+                         lambda bi, pi, bt, ln: (bt[bi, pi], 0, 0)),
+            pl.BlockSpec((1, page_size, rope),
+                         lambda bi, pi, bt, ln: (bt[bi, pi], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, lora),
+                               lambda bi, pi, bt, ln: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, lora), jnp.float32),
+        ])
+    kern = functools.partial(_kernel, page_size=page_size, n_slots=n_slots,
+                             scale=scale, window=window)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, lora), q_lat.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lens.astype(jnp.int32),
+      q_lat, q_rope, ckv_pool, kr_pool)

@@ -53,12 +53,17 @@ def _kernel(bt_ref, kv_len_ref, q_off_ref,  # scalar prefetch
     k_pos = ki * page_size + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, page_size), 1)
 
-    # skip pages beyond the valid length / entirely a-causal pages
+    # skip pages beyond the valid length / entirely a-causal pages / pages
+    # wholly outside the sliding window of every query in this q block
     blk_k_min = ki * page_size
     blk_q_max = q_off + (qi + 1) * block_q - 1
     live = blk_k_min < kv_len
     if causal:
         live = jnp.logical_and(live, blk_k_min <= blk_q_max)
+    if window:
+        blk_q_min = q_off + qi * block_q
+        live = jnp.logical_and(
+            live, blk_k_min + page_size - 1 > blk_q_min - window)
 
     @pl.when(live)
     def _update():

@@ -58,7 +58,8 @@ def ref_paged_prefill_attention(q, k_pool, v_pool, block_table, kv_len,
     return out.reshape(b, sq, h, hd_v).astype(q.dtype)
 
 
-def ref_paged_decode_attention(q, k_pool, v_pool, block_table, lens):
+def ref_paged_decode_attention(q, k_pool, v_pool, block_table, lens, *,
+                               window: int = 0):
     """Oracle for kernels.paged_decode_attention: gather pages densely,
     then masked single-token attention."""
     b, h, hd = q.shape
@@ -70,8 +71,35 @@ def ref_paged_decode_attention(q, k_pool, v_pool, block_table, lens):
     qf = q.astype(jnp.float32).reshape(b, kvh, rep, hd)
     s = jnp.einsum("bgrd,bkgd->bgrk", qf, k.astype(jnp.float32)) * hd ** -0.5
     tok = jnp.arange(n_slots * page)
-    s = jnp.where(tok[None, None, None, :] < lens[:, None, None, None],
-                  s, NEG_INF)
+    mask = tok[None, :] < lens[:, None]
+    if window:
+        mask = mask & (tok[None, :] > lens[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgrk,bkgd->bgrd", p, v.astype(jnp.float32))
     return out.reshape(b, h, hd_v).astype(q.dtype)
+
+
+def ref_paged_mla_decode_attention(q_lat, q_rope, ckv_pool, kr_pool,
+                                   block_table, lens, *, scale: float,
+                                   window: int = 0):
+    """Oracle for kernels.paged_mla_decode_attention: gather latent pages
+    densely, absorbed scores (latent + RoPE terms), masked softmax, PV in
+    the latent space."""
+    b, h, lora = q_lat.shape
+    n_pages, page, rope = kr_pool.shape
+    n_slots = block_table.shape[1]
+    ckv = ckv_pool[block_table].reshape(b, n_slots * page, lora)
+    kr = kr_pool[block_table].reshape(b, n_slots * page, rope)
+    s = (jnp.einsum("bhl,bkl->bhk", q_lat.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bhr,bkr->bhk", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * scale
+    tok = jnp.arange(n_slots * page)
+    mask = tok[None, :] < lens[:, None]
+    if window:
+        mask = mask & (tok[None, :] > lens[:, None] - 1 - window)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkl->bhl", p, ckv.astype(jnp.float32))
+    return out.astype(q_lat.dtype)

@@ -18,6 +18,7 @@ Two layers, mirroring vLLM's split (§2.1, [21]):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional
 
 import jax
@@ -29,16 +30,37 @@ class OutOfPages(Exception):
     pass
 
 
+def window_dead_pages(n_tokens: int, window: int, page_size: int) -> int:
+    """Leading pages wholly outside a sliding window once ``n_tokens``
+    are present: every future query sits at position >= n_tokens and
+    attends keys > pos - window, so a page is dead iff its last token
+    <= n_tokens - window.  The single source of this arithmetic — the
+    allocator, the KV-transfer accounting and the kernels' skip logic
+    all must agree with it."""
+    if not window:
+        return 0
+    return max(0, n_tokens - window + 1) // page_size
+
+
 @dataclasses.dataclass
 class PagedAllocator:
-    """Free-list page allocator with per-request block tables."""
+    """Free-list page allocator with per-request block tables.
+
+    ``window > 0`` makes the allocator sliding-window aware: block-table
+    slots whose pages slid wholly out of the attention window are freed
+    (the slot entry becomes ``None`` — engines point it at the scratch
+    page), so a windowed request holds O(window) physical pages while its
+    logical table keeps absolute slot indexing for the kernels.
+    """
     n_pages: int
     page_size: int
+    window: int = 0
 
     def __post_init__(self):
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
-        self._tables: Dict[str, List[int]] = {}
+        self._tables: Dict[str, List[Optional[int]]] = {}
         self._lens: Dict[str, int] = {}
+        self._trimmed: Dict[str, int] = {}   # leading slots already None
         self.swap_events = 0
 
     # -- queries -------------------------------------------------------
@@ -56,8 +78,33 @@ class PagedAllocator:
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size) if n_tokens > 0 else 0
 
-    def table(self, rid: str) -> List[int]:
+    def dead_slots(self, n_tokens: int) -> int:
+        """Leading block-table slots wholly outside the sliding window
+        once ``n_tokens`` are present."""
+        return window_dead_pages(n_tokens, self.window, self.page_size)
+
+    def pages_for_request(self, n_tokens: int) -> int:
+        """Physical pages a request with n_tokens actually holds —
+        window-aware (the admission policies budget against this)."""
+        return self.pages_for(n_tokens) - self.dead_slots(n_tokens)
+
+    def table(self, rid: str) -> List[Optional[int]]:
+        """Block-table row: absolute slot indexing; ``None`` marks slots
+        whose pages slid out of the window (engines map them to the
+        scratch page)."""
         return list(self._tables[rid])
+
+    def table_padded(self, rid: str, trash: int) -> List[int]:
+        """Block-table row with slid-out slots mapped to the scratch
+        page ``trash`` — the form the engines feed the kernels (which
+        never read those slots: page-skip + masks)."""
+        return [trash if p is None else p for p in self._tables[rid]]
+
+    def live_pages(self, rid: str) -> List[int]:
+        return [p for p in self._tables[rid] if p is not None]
+
+    def pages_held(self, rid: str) -> int:
+        return len(self.live_pages(rid))
 
     def length(self, rid: str) -> int:
         return self._lens[rid]
@@ -66,22 +113,37 @@ class PagedAllocator:
         return rid in self._tables
 
     # -- mutations -----------------------------------------------------
-    def alloc(self, rid: str, n_tokens: int) -> List[int]:
+    def alloc(self, rid: str, n_tokens: int, *,
+              materialize_all: bool = False) -> List[Optional[int]]:
         """Allocate pages for a new request with n_tokens already present
-        (e.g. a received prefilled KV)."""
+        (e.g. a received prefilled KV).  With a window, only in-window
+        pages are physically allocated (dead leading slots are ``None``)
+        unless ``materialize_all`` — prefill needs every page live while
+        chunks stream through it, then trims as the window slides."""
         assert rid not in self._tables, rid
-        need = max(1, self.pages_for(n_tokens))
+        total = max(1, self.pages_for(n_tokens))
+        dead = 0 if materialize_all else min(self.dead_slots(n_tokens),
+                                             total - 1)
+        need = total - dead
         if need > len(self._free):
             raise OutOfPages(f"{rid}: need {need}, free {len(self._free)}")
         pages = [self._free.pop() for _ in range(need)]
-        self._tables[rid] = pages
+        self._tables[rid] = [None] * dead + pages
         self._lens[rid] = n_tokens
-        return list(pages)
+        self._trimmed[rid] = dead
+        return self.table(rid)
 
     def append_token(self, rid: str) -> int:
-        """Account one decoded token; grows the table when a page fills.
-        Returns the physical page holding the new token."""
+        """Account one decoded token; grows the table when a page fills
+        and frees pages that slid out of the window.  Returns the
+        physical page holding the new token."""
         ln = self._lens[rid]
+        # trim for queries >= ln (the appended token IS this iteration's
+        # query and still attends key ln - window + 1) BEFORE growing:
+        # at a page boundary the free and the grow can land on the same
+        # call, and the freed page must be reusable for the grow so a
+        # full pool never raises while net usage stays O(window)
+        self.trim(rid, ln)
         if ln == len(self._tables[rid]) * self.page_size:
             if not self._free:
                 raise OutOfPages(f"{rid}: decode append")
@@ -89,12 +151,41 @@ class PagedAllocator:
         self._lens[rid] = ln + 1
         return self._tables[rid][ln // self.page_size]
 
-    def free(self, rid: str) -> None:
-        self._free.extend(reversed(self._tables.pop(rid)))
-        self._lens.pop(rid)
+    def trim(self, rid: str, processed: int) -> int:
+        """Free pages wholly outside the window of any query at position
+        >= ``processed`` (chunked prefill calls this as chunks complete;
+        ``append_token`` calls it every decode step).  Resumes from the
+        last trimmed slot, so each call is O(pages freed now), not
+        O(slots ever freed).  Returns the number of pages freed."""
+        if not self.window:
+            return 0
+        table = self._tables[rid]
+        start = self._trimmed[rid]
+        # keep-one-page clamp, same as alloc()/kv_page_bytes: the last
+        # page always stays live so the shipped payload and the decode
+        # side's window-aware alloc agree even at degenerate windows
+        stop = min(self.dead_slots(processed), len(table) - 1)
+        freed = 0
+        for s in range(start, stop):
+            if table[s] is not None:
+                self._free.append(table[s])
+                table[s] = None
+                freed += 1
+        self._trimmed[rid] = max(start, stop)
+        return freed
 
-    def can_admit(self, n_tokens: int) -> bool:
-        return self.pages_for(max(1, n_tokens)) <= len(self._free)
+    def free(self, rid: str) -> None:
+        self._free.extend(p for p in reversed(self._tables.pop(rid))
+                          if p is not None)
+        self._lens.pop(rid)
+        self._trimmed.pop(rid, None)
+
+    def can_admit(self, n_tokens: int, *,
+                  materialize_all: bool = False) -> bool:
+        n = max(1, n_tokens)
+        need = (self.pages_for(n) if materialize_all
+                else max(1, self.pages_for_request(n)))
+        return need <= len(self._free)
 
 
 # ---------------------------------------------------------------------------
@@ -102,7 +193,16 @@ class PagedAllocator:
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class PagePool:
-    """Per-layer K/V page pools. k/v: (L, n_pages, page, kvh, hd)."""
+    """Per-layer K/V page pools.
+
+    GQA layout (``create``): k/v are (L, n_pages, page, kvh, hd).
+    MLA latent layout (``create_latent``): the pair is reused as
+    (compressed latent, decoupled-RoPE key) — k: (L, n_pages, page,
+    kv_lora_rank), v: (L, n_pages, page, qk_rope_head_dim).  All pool
+    ops below are trailing-dim generic, so scatter/gather/install and
+    the page-granular KV transfer work identically for both layouts —
+    the latent pages are just ~an order of magnitude narrower.
+    """
     k: jnp.ndarray
     v: jnp.ndarray
 
@@ -111,6 +211,17 @@ class PagePool:
                hd: int, dtype=jnp.bfloat16) -> "PagePool":
         shape = (n_layers, n_pages, page_size, kvh, hd)
         return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+    @classmethod
+    def create_latent(cls, n_layers: int, n_pages: int, page_size: int,
+                      kv_lora_rank: int, rope_dim: int,
+                      dtype=jnp.bfloat16) -> "PagePool":
+        """MLA latent pool: per-token payload is the compressed latent
+        (kv_lora_rank) + shared RoPE key (rope_dim), not per-head K/V."""
+        return cls(
+            k=jnp.zeros((n_layers, n_pages, page_size, kv_lora_rank),
+                        dtype),
+            v=jnp.zeros((n_layers, n_pages, page_size, rope_dim), dtype))
 
     @property
     def page_size(self) -> int:
@@ -148,8 +259,15 @@ class PagePool:
     def install(self, pages, k_pages, v_pages) -> "PagePool":
         """Install received page contents (all layers at once) into local
         physical pages — decode-side admission.  pages: (n,) ids;
-        k_pages/v_pages: (L, n, page, kvh, hd)."""
-        idx = jnp.asarray(pages)
-        return PagePool(
-            k=self.k.at[:, idx].set(k_pages.astype(self.k.dtype)),
-            v=self.v.at[:, idx].set(v_pages.astype(self.v.dtype)))
+        k_pages/v_pages: (L, n, page, kvh, hd).  Jitted with the pools
+        donated: XLA scatters in place instead of copying both whole
+        pool tensors per admitted batch (no-op on CPU)."""
+        k, v = _install_pages(self.k, self.v, jnp.asarray(pages),
+                              k_pages, v_pages)
+        return PagePool(k=k, v=v)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _install_pages(k, v, idx, k_pages, v_pages):
+    return (k.at[:, idx].set(k_pages.astype(k.dtype)),
+            v.at[:, idx].set(v_pages.astype(v.dtype)))

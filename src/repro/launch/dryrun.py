@@ -13,7 +13,6 @@ Usage:
   python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
 """
 import argparse
-import dataclasses
 import json
 import re
 import sys
@@ -100,9 +99,10 @@ def build_step(cfg, shape_name, mesh, batch_axes, opts=()):
         dsize *= mesh.shape.get(ax, 1)
     if batch % dsize != 0:
         batch_axes = ()
-    data_ns = lambda nd: NamedSharding(
-        mesh, P(tuple(batch_axes) if batch_axes else None,
-                *([None] * nd)))
+    def data_ns(nd):
+        return NamedSharding(
+            mesh, P(tuple(batch_axes) if batch_axes else None,
+                    *([None] * nd)))
 
     if kind == "train":
         p_sh = S.param_shardings(params_abs, mesh, fsdp=True)

@@ -9,7 +9,7 @@ sliding-window variant (window 4096, ring cache); whisper is skipped
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

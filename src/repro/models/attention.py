@@ -12,7 +12,6 @@ TPU-native "sequence-parallel decode" described in DESIGN.md §5.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -281,7 +280,8 @@ def gqa_prefill_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
 
 def gqa_decode_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
                      k_layer: jnp.ndarray, v_layer: jnp.ndarray, *,
-                     pos, pages, offs, block_tables, lens):
+                     pos, pages, offs, block_tables, lens,
+                     window: int = 0):
     """Batched one-token decode against one layer's page pool.
 
     x: (slots, 1, d); pos: (slots,) append position per slot;
@@ -295,7 +295,7 @@ def gqa_decode_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
     k_layer = k_layer.at[pages, offs].set(k[:, 0].astype(k_layer.dtype))
     v_layer = v_layer.at[pages, offs].set(v[:, 0].astype(v_layer.dtype))
     out = ops.decode_attention(q[:, 0], k_layer, v_layer, block_tables,
-                               lens)
+                               lens, window=window)
     return out.reshape(b, 1, -1) @ p["wo"], k_layer, v_layer
 
 
@@ -452,10 +452,7 @@ def _mla_absorbed_attn(p, cfg, q_nope, q_rope, ckv_cache, kr_cache, *,
     s_cache = ckv_cache.shape[1]
     ckv_cache = SH.seq_constrain(ckv_cache, 1)
     kr_cache = SH.seq_constrain(kr_cache, 1)
-    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h,
-                               m.qk_nope_head_dim + m.v_head_dim)
-    w_uk = wkv_b[:, :, :m.qk_nope_head_dim]
-    w_uv = wkv_b[:, :, m.qk_nope_head_dim:]
+    w_uk, w_uv = _mla_absorb(p, cfg)
     f32 = jnp.float32
     # bf16 stays bf16 on the wire; accumulation in f32 via
     # preferred_element_type (halves any cache gather traffic)
@@ -493,7 +490,6 @@ def mla_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict,
     """
     m = cfg.mla
     b = x.shape[0]
-    h = cfg.n_heads
     positions = jnp.full((b, 1), pos)
     q_nope, q_rope = _mla_q(p, cfg, x, positions)          # (b,1,h,·)
     c_kv, k_rope = _mla_kv_latent(p, cfg, x, positions)
@@ -501,9 +497,7 @@ def mla_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict,
         cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
     kr_cache = jax.lax.dynamic_update_slice(
         cache["krope"], k_rope.astype(cache["krope"].dtype), (0, pos, 0))
-    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
-    w_uk = wkv_b[:, :, :m.qk_nope_head_dim]                # (lora, h, nope)
-    w_uv = wkv_b[:, :, m.qk_nope_head_dim:]                # (lora, h, v)
+    w_uk, w_uv = _mla_absorb(p, cfg)       # (lora, h, nope) / (lora, h, v)
     q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
                        w_uk.astype(jnp.float32))           # (b,1,h,lora)
     s_cache = ckv_cache.shape[1]
@@ -523,6 +517,93 @@ def mla_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict,
     out = jnp.einsum("bqhl,lhv->bqhv", o_lat, w_uv.astype(jnp.float32))
     out = out.reshape(b, 1, -1).astype(x.dtype) @ p["wo"]
     return out, {"ckv": ckv_cache, "krope": kr_cache}
+
+
+def _mla_absorb(p: dict, cfg: ModelConfig):
+    """Split wkv_b into the absorbed up-projections (W_uk, W_uv)."""
+    m = cfg.mla
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, cfg.n_heads,
+                               m.qk_nope_head_dim + m.v_head_dim)
+    return wkv_b[:, :, :m.qk_nope_head_dim], wkv_b[:, :, m.qk_nope_head_dim:]
+
+
+def mla_prefill_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                      ckv_layer: jnp.ndarray, kr_layer: jnp.ndarray, *,
+                      positions, q_offset, kv_len, block_tables,
+                      pages_idx, offs_idx, window: int = 0):
+    """Fused chunk prefill against one layer's paged LATENT pool.
+
+    x: (segs, sq, d) packed segments; ckv_layer: (n_pages, page, lora)
+    compressed-latent pages; kr_layer: (n_pages, page, rope) decoupled
+    RoPE keys.  The chunk's latent is scattered into the pool, then the
+    segments attend in ABSORBED form against the block-table gather of
+    the latent — never decompressing the cache to per-head K/V (the
+    gather moves the ~14x-compressed latent only).  Returns
+    (attn_out, ckv_layer, kr_layer).
+    """
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_kv_latent(p, cfg, x, positions)
+    ckv_layer = ckv_layer.at[pages_idx, offs_idx].set(
+        c_kv.astype(ckv_layer.dtype))
+    kr_layer = kr_layer.at[pages_idx, offs_idx].set(
+        k_rope.astype(kr_layer.dtype))
+    n_pages, page, lora = ckv_layer.shape
+    n_slots = block_tables.shape[1]
+    ckv_seq = ckv_layer[block_tables].reshape(b, n_slots * page, lora)
+    kr_seq = kr_layer[block_tables].reshape(b, n_slots * page, -1)
+    w_uk, w_uv = _mla_absorb(p, cfg)
+    f32 = jnp.float32
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(f32),
+                       w_uk.astype(f32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bqhl,bsl->bhqs", q_lat, ckv_seq.astype(f32))
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(f32),
+                           kr_seq.astype(f32))) * scale
+    k_pos = jnp.arange(n_slots * page)
+    mask = (positions[:, :, None] >= k_pos[None, None, :]) \
+        & (k_pos[None, None, :] < kv_len[:, None, None])
+    if window:
+        mask = mask & (k_pos[None, None, :] > positions[:, :, None] - window)
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    pattn = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsl->bqhl", pattn, ckv_seq.astype(f32))
+    out = jnp.einsum("bqhl,lhv->bqhv", o_lat, w_uv.astype(f32))
+    out = out.reshape(b, s, -1).astype(x.dtype) @ p["wo"]
+    return out, ckv_layer, kr_layer
+
+
+def mla_decode_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                     ckv_layer: jnp.ndarray, kr_layer: jnp.ndarray, *,
+                     pos, pages, offs, block_tables, lens,
+                     window: int = 0):
+    """Batched one-token MLA decode against one layer's latent pool via
+    the Pallas paged-MLA kernel: queries are absorbed through W_uk on
+    the way in, the kernel streams latent pages and accumulates o_lat in
+    the latent space, and W_uv up-projects once on the way out.
+    Returns (attn_out, ckv_layer, kr_layer)."""
+    from repro.kernels import ops
+    m = cfg.mla
+    b = x.shape[0]
+    positions = pos[:, None]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)          # (b,1,h,·)
+    c_kv, k_rope = _mla_kv_latent(p, cfg, x, positions)
+    ckv_layer = ckv_layer.at[pages, offs].set(
+        c_kv[:, 0].astype(ckv_layer.dtype))
+    kr_layer = kr_layer.at[pages, offs].set(
+        k_rope[:, 0].astype(kr_layer.dtype))
+    w_uk, w_uv = _mla_absorb(p, cfg)
+    f32 = jnp.float32
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(f32),
+                       w_uk.astype(f32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    o_lat = ops.mla_decode_attention(
+        q_lat, q_rope[:, 0].astype(f32), ckv_layer, kr_layer,
+        block_tables, lens, scale=scale, window=window)
+    out = jnp.einsum("bhl,lhv->bhv", o_lat.astype(f32), w_uv.astype(f32))
+    out = out.reshape(b, 1, -1).astype(x.dtype) @ p["wo"]
+    return out, ckv_layer, kr_layer
 
 
 # ---------------------------------------------------------------------------

@@ -232,7 +232,6 @@ def _decode_attn_batched(q, k_cache, v_cache, pos, window, ring):
 def _mla_decode_batched(p, cfg, x, cache, pos, window):
     m = cfg.mla
     b = x.shape[0]
-    h = cfg.n_heads
     positions = pos[:, None]
     q_nope, q_rope = attn._mla_q(p, cfg, x, positions)
     c_kv, k_rope = attn._mla_kv_latent(p, cfg, x, positions)
@@ -240,10 +239,7 @@ def _mla_decode_batched(p, cfg, x, cache, pos, window):
     slots = jnp.minimum(pos, s_cache - 1)
     ckv_cache = _scatter_kv(cache["ckv"], c_kv, slots)
     kr_cache = _scatter_kv(cache["krope"], k_rope, slots)
-    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h,
-                               m.qk_nope_head_dim + m.v_head_dim)
-    w_uk = wkv_b[:, :, :m.qk_nope_head_dim]
-    w_uv = wkv_b[:, :, m.qk_nope_head_dim:]
+    w_uk, w_uv = attn._mla_absorb(p, cfg)
     q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
                        w_uk.astype(jnp.float32))
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5

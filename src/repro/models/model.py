@@ -22,14 +22,16 @@ a shared device page pool instead of per-request dense caches):
   * ``decode_step_greedy`` — dense decode with on-device argmax (the
                            dense fallback's serving step)
 
-The dense cache path (``init_cache``/``prefill``/``decode_step``) remains
-the substrate for training, recurrent/MLA/windowed architectures, and
+The paged backend covers every uniform-attention config — GQA and MLA
+(latent pages), full and sliding-window attention.  The dense cache
+path (``init_cache``/``prefill``/``decode_step``) remains the substrate
+for training, recurrent/hybrid and encoder-decoder architectures, and
 the coupled vLLM-style baseline.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +40,7 @@ from repro.models import attention as A
 from repro.models import blocks as B
 from repro.models import mlp as MLP
 from repro.models import sharding as SH
-from repro.models.config import ATTN, CROSS_ATTN, ModelConfig
+from repro.models.config import ATTN, ModelConfig
 
 
 def _dtype(cfg: ModelConfig):
@@ -351,7 +353,6 @@ def prefill_chunked(params, cfg: ModelConfig, tokens, cache, *,
 
 def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
     """tokens: (b, 1); pos: (b,) current positions. -> (logits, cache)."""
-    b = tokens.shape[0]
     h = _embed(params, cfg, tokens, pos[:, None])
     h, cache, _ = _run_layers(params, cfg, h, mode="decode", caches=cache,
                               pos=pos)
@@ -370,11 +371,11 @@ def decode_step_greedy(params, cfg: ModelConfig, tokens, cache, pos):
 # paged execution backend (serving hot path)
 # ---------------------------------------------------------------------------
 def paged_supported(cfg: ModelConfig) -> bool:
-    """True if the paged backend can serve this config: uniform full
-    self-attention layers over a GQA cache.  MLA, recurrent/hybrid,
-    encoder-decoder and sliding-window archs stay on the dense path."""
-    return (cfg.mla is None and not cfg.is_encoder_decoder
-            and cfg.sliding_window == 0
+    """True if the paged backend can serve this config: uniform
+    self-attention layers (GQA or MLA, full or sliding-window) over a
+    page pool.  Recurrent/hybrid, encoder-decoder and mixed-pattern
+    archs stay on the dense path."""
+    return (not cfg.is_encoder_decoder
             and all(k == ATTN for k in cfg.layer_kinds))
 
 
@@ -394,9 +395,11 @@ def _paged_attn_block(p, cfg: ModelConfig, x, k_layer, v_layer, attn):
 
 
 def _run_layers_paged(params, cfg: ModelConfig, h, k_pool, v_pool, attn):
-    """Layer runner over the (L, n_pages, page, kvh, hd) pools: prefix
-    and suffix unrolled, body scanned — pool rows are indexed by absolute
-    layer id so the engines' PagePool layout is position-stable."""
+    """Layer runner over the per-layer page pools — (L, n_pages, page,
+    kvh, hd) K/V for GQA, (L, n_pages, page, width) (latent, rope-key)
+    for MLA: prefix and suffix unrolled, body scanned — pool rows are
+    indexed by absolute layer id so the engines' PagePool layout is
+    position-stable."""
     npre = len(cfg.prefix)
     pat = len(cfg.pattern)
 
@@ -457,12 +460,15 @@ def prefill_paged(params, cfg: ModelConfig, tokens, q_offset, kv_len,
     sq = tokens.shape[1]
     positions = q_offset[:, None] + jnp.arange(sq)[None, :]
     h = _embed(params, cfg, tokens, positions)
+    attn_fn = (A.mla_prefill_paged if cfg.mla is not None
+               else A.gqa_prefill_paged)
 
     def attn(p, x, k_layer, v_layer):
-        return A.gqa_prefill_paged(
+        return attn_fn(
             p, cfg, x, k_layer, v_layer, positions=positions,
             q_offset=q_offset, kv_len=kv_len, block_tables=block_tables,
-            pages_idx=pages_idx, offs_idx=offs_idx)
+            pages_idx=pages_idx, offs_idx=offs_idx,
+            window=cfg.sliding_window)
 
     h, k_pool, v_pool = _run_layers_paged(params, cfg, h, k_pool, v_pool,
                                           attn)
@@ -484,11 +490,14 @@ def decode_step_paged(params, cfg: ModelConfig, tokens, pos, pages, offs,
     (next_tokens (slots,) int32, k_pool, v_pool).
     """
     h = _embed(params, cfg, tokens, pos[:, None])
+    attn_fn = (A.mla_decode_paged if cfg.mla is not None
+               else A.gqa_decode_paged)
 
     def attn(p, x, k_layer, v_layer):
-        return A.gqa_decode_paged(
+        return attn_fn(
             p, cfg, x, k_layer, v_layer, pos=pos, pages=pages, offs=offs,
-            block_tables=block_tables, lens=lens)
+            block_tables=block_tables, lens=lens,
+            window=cfg.sliding_window)
 
     h, k_pool, v_pool = _run_layers_paged(params, cfg, h, k_pool, v_pool,
                                           attn)

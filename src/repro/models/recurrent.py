@@ -12,7 +12,6 @@ TPU adaptation notes (DESIGN.md §3):
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -193,7 +192,8 @@ def slstm_forward(p: dict, cfg: ModelConfig, x: jnp.ndarray, state=None):
     if state is None:
         state = slstm_init_state(cfg, b, x.dtype)
     wx = x @ p["w"] + p["b"]                        # (b,s,4d)
-    step = lambda xt, st: _slstm_step(p, cfg, xt, st)
+    def step(xt, st):
+        return _slstm_step(p, cfg, xt, st)
     h_seq, new_state = _chunked_scan(step, state, wx, _CHUNK)
     h_seq = h_seq.astype(x.dtype)
     up = h_seq @ p["up"]
@@ -213,7 +213,8 @@ def slstm_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, state: dict):
 
 def slstm_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
     d = cfg.d_model
-    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    def z():
+        return jnp.zeros((batch, d), jnp.float32)
     return {"c": z(), "n": z(), "h": z(), "m": z()}
 
 

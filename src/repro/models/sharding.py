@@ -13,10 +13,10 @@ replicated, the 4864-wide FFN and the 151936 vocab still shard).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+import contextlib as _contextlib
+from typing import Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # param-name classes ---------------------------------------------------------
@@ -190,7 +190,6 @@ def replicated(mesh: Mesh):
 # boundaries — without these, sharding is lost through scan+remat and XLA
 # replicates the batch dim of attention scores / logits).
 # ---------------------------------------------------------------------------
-import contextlib as _contextlib
 
 _ACT_CTX: dict = {"batch_axes": None, "model_axis": None, "mesh": None,
                   "opts": frozenset()}

@@ -7,7 +7,7 @@ over the ``data`` axis when fsdp sharding is on).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +33,8 @@ class AdamWConfig:
 
 
 def init(params) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       m=jax.tree_util.tree_map(zeros, params),
                       v=jax.tree_util.tree_map(zeros, params))

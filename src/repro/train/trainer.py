@@ -7,7 +7,6 @@ length-predictor fine-tuning (paper §3.3.2 / Fig. 8).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -15,8 +15,8 @@ import textwrap
 import pytest
 
 from repro.launch import hlo_cost as H
-from repro.launch.specs import SHAPES, input_specs, resolve_config
-from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.specs import input_specs, resolve_config
+from repro.configs import get_config
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -143,6 +143,88 @@ def test_paged_prefill_matches_dense_prefill_kernel():
         assert float(jnp.abs(out_paged[i] - out_dense[0]).max()) < 2e-5
 
 
+# window edge cases: smaller than a page, exactly a page, spanning pages
+@pytest.mark.parametrize("window", [3, 16, 21])
+def test_paged_prefill_attention_window(window):
+    """Windowed paged prefill: in-kernel kv-block skipping + window mask
+    agree with the dense-gather oracle across page-boundary cases."""
+    b, sq, h, kvh, hd, npages, page, nslots = 3, 16, 4, 2, 32, 12, 16, 4
+    q = _mk((b, sq, h, hd), jnp.float32, 30)
+    kp = _mk((npages, page, kvh, hd), jnp.float32, 31)
+    vp = _mk((npages, page, kvh, hd), jnp.float32, 32)
+    bt = jax.random.randint(jax.random.fold_in(KEY, 33), (b, nslots), 0,
+                            npages)
+    q_off = jnp.array([0, 17, 48], jnp.int32)   # incl. offset mid-page
+    kv_len = q_off + sq
+    out = ops.prefill_attention(q, kp, vp, kv_len, q_off, block_table=bt,
+                                window=window, block_q=16)
+    exp = ref.ref_paged_prefill_attention(q, kp, vp, bt, kv_len, q_off,
+                                          window=window)
+    assert not bool(jnp.isnan(out).any())
+    assert float(jnp.abs(out - exp).max()) < 2e-5
+
+
+@pytest.mark.parametrize("window", [3, 16, 21])
+def test_paged_decode_attention_window(window):
+    """Windowed paged decode: pages that slid wholly out of the window
+    are skipped (their table slots may be scratch) and the token mask
+    matches the oracle at page boundaries."""
+    b, h, kvh, hd, npages, page, nslots = 4, 4, 2, 32, 12, 16, 4
+    q = _mk((b, h, hd), jnp.float32, 34)
+    kp = _mk((npages, page, kvh, hd), jnp.float32, 35)
+    vp = _mk((npages, page, kvh, hd), jnp.float32, 36)
+    bt = jax.random.randint(jax.random.fold_in(KEY, 37), (b, nslots), 0,
+                            npages)
+    # lens straddling page boundaries: window end mid-page / on-page-edge
+    lens = jnp.array([5, 16, 33, 64], jnp.int32)
+    out = ops.decode_attention(q, kp, vp, bt, lens, window=window)
+    exp = ref.ref_paged_decode_attention(q, kp, vp, bt, lens,
+                                         window=window)
+    assert float(jnp.abs(out - exp).max()) < 2e-5
+
+
+def test_paged_decode_window_ignores_slid_out_pages():
+    """Out-of-window table slots may point at a garbage scratch page —
+    the kernel must never let that page reach the softmax."""
+    b, h, kvh, hd, npages, page = 1, 4, 2, 32, 4, 8
+    q = _mk((b, h, hd), jnp.float32, 38)
+    kp = _mk((npages, page, kvh, hd), jnp.float32, 39)
+    vp = _mk((npages, page, kvh, hd), jnp.float32, 40)
+    # request: 24 tokens over slots [0,1,2]; window 8 -> the query at
+    # position 23 attends keys 16..23, so slots 0 AND 1 are dead
+    bt_live = jnp.array([[0, 1, 2]], jnp.int32)
+    bt_trash = jnp.array([[3, 3, 2]], jnp.int32)   # dead slots -> scratch
+    lens = jnp.array([24], jnp.int32)
+    out_live = ops.decode_attention(q, kp, vp, bt_live, lens, window=8)
+    out_trash = ops.decode_attention(q, kp, vp, bt_trash, lens, window=8)
+    assert float(jnp.abs(out_live - out_trash).max()) == 0.0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 3, 16, 21])
+def test_paged_mla_decode_attention_sweep(dtype, window):
+    """Absorbed MLA decode over the paged latent pool vs dense-gather
+    oracle, across window edge cases."""
+    b, h, lora, rope, npages, page, nslots = 3, 4, 32, 16, 10, 16, 4
+    ql = _mk((b, h, lora), dtype, 41)
+    qr = _mk((b, h, rope), dtype, 42)
+    cp = _mk((npages, page, lora), dtype, 43)
+    krp = _mk((npages, page, rope), dtype, 44)
+    bt = jax.random.randint(jax.random.fold_in(KEY, 45), (b, nslots), 0,
+                            npages)
+    lens = jnp.array([7, 16, 50], jnp.int32)
+    scale = (lora + rope) ** -0.5
+    out = ops.mla_decode_attention(ql, qr, cp, krp, bt, lens, scale=scale,
+                                   window=window)
+    exp = ref.ref_paged_mla_decode_attention(ql, qr, cp, krp, bt, lens,
+                                             scale=scale, window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert out.shape == exp.shape
+    assert not bool(jnp.isnan(out.astype(jnp.float32)).any())
+    assert float(jnp.abs(out.astype(jnp.float32)
+                         - exp.astype(jnp.float32)).max()) < tol
+
+
 def test_paged_decode_single_token_cache():
     """lens=1: only the first token of the first page is live."""
     q = _mk((1, 4, 64), jnp.float32, 15)

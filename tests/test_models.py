@@ -11,7 +11,8 @@ from repro.configs import get_smoke_config
 from repro.models import frontends as F
 from repro.models import model as M
 
-F32 = lambda a: dataclasses.replace(get_smoke_config(a), dtype="float32")
+def F32(a):
+    return dataclasses.replace(get_smoke_config(a), dtype="float32")
 
 
 @pytest.mark.parametrize("arch", ["qwen2_0_5b", "recurrentgemma_9b",
@@ -96,8 +97,6 @@ def test_classifier_head():
 def test_mla_cache_is_compressed():
     cfg = F32("deepseek_v2_236b")
     cache = M.init_cache(cfg, 1, 32)
-    leaves = {p for p, _ in jax.tree_util.tree_flatten_with_path(cache)[0]
-              for p in [str(p)]}
     flat = jax.tree_util.tree_flatten_with_path(cache)[0]
     names = {"".join(str(e) for e in path) for path, _ in flat}
     assert any("ckv" in n for n in names)

@@ -1,8 +1,6 @@
 """Sharding-rule unit tests: divisibility fallbacks, FSDP vs serve2d,
 cache head-vs-seq sharding, stacked (scanned) leaf handling."""
 import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.models import sharding as S

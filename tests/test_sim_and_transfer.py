@@ -138,7 +138,8 @@ def test_adamw_converges_on_quadratic():
                           total_steps=200)
     params = {"w": jnp.array([5.0, -3.0])}
     state = opt.init(params)
-    loss = lambda p: jnp.sum((p["w"] - 1.0) ** 2)
+    def loss(p):
+        return jnp.sum((p["w"] - 1.0) ** 2)
     for _ in range(150):
         g = jax.grad(loss)(params)
         params, state = opt.update(cfg, g, state, params)

@@ -9,7 +9,6 @@ import copy
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_smoke_config
