@@ -4,12 +4,17 @@ Runs the SAME small workload through the real-execution disaggregated
 engines twice per scenario — legacy dense backend vs the paged backend
 (fused chunk prefill through the Pallas kernels + pool-based decode) —
 and reports wall time, per-phase call counts and KV wire bytes as JSON,
-plus the harness CSV rows.  Three scenarios cover every paged layout:
+plus the harness CSV rows.  Five scenarios cover every paged layout:
 
   * ``gqa``      — full attention, per-head K/V pages (qwen2)
   * ``windowed`` — sliding-window attention; the allocator frees pages
                    that slide out of the window (mistral-nemo, w=6)
   * ``mla``      — DeepSeek-V2 latent pages + Pallas paged-MLA decode
+  * ``vlm``      — llama-3.2-vision cross-attention layers: encoder
+                   (patch) K/V in read-only cross pages + dual block
+                   tables per request
+  * ``encdec``   — whisper enc-dec: every decoder layer cross-attends
+                   the encoder output through cross pages
 
 NOTE: on CPU the Pallas kernels execute in ``interpret=True`` mode, so
 absolute wall times here track dispatch/bookkeeping, not kernel speed —
@@ -79,17 +84,32 @@ def _scenarios():
                                    dtype="float32", sliding_window=6)
     mla = dataclasses.replace(get_smoke_config("deepseek_v2_236b"),
                               dtype="float32")
+    vlm = dataclasses.replace(get_smoke_config("llama_3_2_vision_11b"),
+                              dtype="float32")
+    encdec = dataclasses.replace(get_smoke_config("whisper_tiny"),
+                                 dtype="float32")
     return [("gqa", gqa, 6, 6), ("windowed", windowed, 4, 6),
-            ("mla", mla, 4, 5)]
+            ("mla", mla, 4, 5), ("vlm", vlm, 4, 5),
+            ("encdec", encdec, 4, 5)]
 
 
-def run(out_path=None):
+def run(out_path=None, scenarios=None):
     report = {}
     rows = []
-    for name, cfg, n_reqs, max_dec in _scenarios():
+    all_scenarios = _scenarios()
+    if scenarios:
+        known = {name for name, *_ in all_scenarios}
+        unknown = set(scenarios) - known
+        if unknown:
+            raise SystemExit(f"unknown scenarios {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+    for name, cfg, n_reqs, max_dec in all_scenarios:
+        if scenarios and name not in scenarios:
+            continue
         params = M.init_params(jax.random.PRNGKey(0), cfg)
         reqs = generate("Mixed", n_reqs, seed=7, max_prompt=32,
-                        max_decode=max_dec, vocab_size=cfg.vocab_size)
+                        max_decode=max_dec, vocab_size=cfg.vocab_size,
+                        enc_ctx=cfg.cross_ctx, enc_dim=cfg.d_model)
         dense = _serve(cfg, params, copy.deepcopy(reqs), "dense")
         paged = _serve(cfg, params, copy.deepcopy(reqs), "paged")
         identical = dense.pop("outputs_digest") \
@@ -97,6 +117,7 @@ def run(out_path=None):
         report[name] = {
             "model": cfg.name,
             "window": cfg.sliding_window,
+            "cross_ctx": cfg.cross_ctx,
             "dense": dense,
             "paged": paged,
             "token_identical": identical,
@@ -125,4 +146,9 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None,
                     help="also write the JSON report to this path "
                          "(CI uploads it as the BENCH_* artifact)")
-    run(ap.parse_args().out)
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated subset, e.g. 'gqa,encdec' "
+                         "(default: all)")
+    args = ap.parse_args()
+    run(args.out, scenarios=args.scenarios.split(",")
+        if args.scenarios else None)

@@ -4,31 +4,30 @@
 ``python -m benchmarks.run``             — run everything
 ``python -m benchmarks.run fig16 fig18`` — run a subset by prefix
 ``python -m benchmarks.run --list``      — list registered benchmarks
+
+Benchmark modules import JAX (and build models) at import time, so the
+registry maps names to MODULE PATHS and imports lazily: ``--list`` and
+prefix filtering resolve without importing anything heavy — the CI
+smoke job uses this to sanity-check the registry in milliseconds.
 """
+import importlib
 import sys
 import traceback
 
-from benchmarks import (fig02_phase_characteristics, fig03_interference_pp,
-                        fig04_interference_pd, fig05_interference_dd,
-                        fig11_15_end_to_end, fig16_prefill_sched,
-                        fig17_predictor_overhead, fig18_decode_sched,
-                        fig19_load_balance, flip_latency, paged_serving,
-                        predictor_accuracy, roofline_report)
-
 ALL = [
-    ("fig02", fig02_phase_characteristics.run),
-    ("fig03", fig03_interference_pp.run),
-    ("fig04", fig04_interference_pd.run),
-    ("fig05", fig05_interference_dd.run),
-    ("fig11_15", fig11_15_end_to_end.run),
-    ("fig16", fig16_prefill_sched.run),
-    ("fig17", fig17_predictor_overhead.run),
-    ("fig18", fig18_decode_sched.run),
-    ("fig19", fig19_load_balance.run),
-    ("predictor_accuracy", predictor_accuracy.run),
-    ("flip_latency", flip_latency.run),
-    ("roofline", roofline_report.run),
-    ("paged_serving", paged_serving.run),
+    ("fig02", "benchmarks.fig02_phase_characteristics"),
+    ("fig03", "benchmarks.fig03_interference_pp"),
+    ("fig04", "benchmarks.fig04_interference_pd"),
+    ("fig05", "benchmarks.fig05_interference_dd"),
+    ("fig11_15", "benchmarks.fig11_15_end_to_end"),
+    ("fig16", "benchmarks.fig16_prefill_sched"),
+    ("fig17", "benchmarks.fig17_predictor_overhead"),
+    ("fig18", "benchmarks.fig18_decode_sched"),
+    ("fig19", "benchmarks.fig19_load_balance"),
+    ("predictor_accuracy", "benchmarks.predictor_accuracy"),
+    ("flip_latency", "benchmarks.flip_latency"),
+    ("roofline", "benchmarks.roofline_report"),
+    ("paged_serving", "benchmarks.paged_serving"),
 ]
 
 
@@ -40,11 +39,11 @@ def main() -> None:
         return
     print("name,us_per_call,derived")
     failures = []
-    for name, fn in ALL:
+    for name, module in ALL:
         if wanted and not any(name.startswith(w) for w in wanted):
             continue
         try:
-            fn()
+            importlib.import_module(module).run()
         except Exception as e:  # keep the harness running
             failures.append(name)
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")

@@ -14,9 +14,18 @@ Layouts:
                  payload disaggregation ships is ~an order of magnitude
                  smaller than full GQA KV.
   * ``dense``  — per-request dense cache pytrees; the fallback for
-                 recurrent/hybrid, encoder-decoder and mixed-pattern
-                 architectures (and the substrate for training and the
-                 coupled vLLM-style baseline).
+                 recurrent/hybrid architectures (and the substrate for
+                 training and the coupled vLLM-style baseline).
+
+Cross-attention KV (the ``cross`` field):
+  * ``none``  — the arch has no CROSS_ATTN layers.
+  * ``pages`` — VLM / enc-dec on the paged backend: the encoder K/V of
+                every cross layer lives in READ-ONLY pages of the same
+                pool, addressed by a second per-request block table —
+                prefilled once, never appended to, freed with the
+                request.
+  * ``dense`` — cross KV rides in the dense cache pytree (only when the
+                backend itself is dense, e.g. ``backend="dense"``).
 """
 from __future__ import annotations
 
@@ -34,6 +43,9 @@ class BackendSpec:
     window: int             # sliding window in tokens (0 = unlimited)
     token_width: int        # pool scalars per token per layer
     page_token_bytes: int   # wire/pool bytes per token per layer
+    cross: str = "none"     # "none" | "pages" | "dense"
+    cross_ctx: int = 0      # encoder tokens each cross layer attends
+    n_cross_layers: int = 0
 
     @property
     def paged(self) -> bool:
@@ -62,6 +74,15 @@ def backend_for(cfg: ModelConfig, requested: str = "auto") -> BackendSpec:
     else:
         layout = "dense"
         width = 0
+    if cfg.n_cross_layers == 0:
+        cross = "none"
+    elif backend == "paged":
+        cross = "pages"
+    else:
+        cross = "dense"
     return BackendSpec(backend=backend, layout=layout,
                        window=cfg.sliding_window, token_width=width,
-                       page_token_bytes=width * dtype_bytes)
+                       page_token_bytes=width * dtype_bytes,
+                       cross=cross,
+                       cross_ctx=cfg.cross_ctx if cross != "none" else 0,
+                       n_cross_layers=cfg.n_cross_layers)

@@ -16,8 +16,12 @@ Execution backends (selected by ``core.backend.backend_for``):
     ``append_token`` — which also FREES pages that slide out of the
     attention window, so windowed decode holds O(window) pages — and
     argmax stays on device (one int per slot crosses to host).
+    Cross-attention archs (VLM / enc-dec) install the shipped encoder
+    pages once at admission; every iteration streams them READ-ONLY
+    through a second block table (no cross scatter ever happens at
+    decode) and they are freed exactly once when the request finishes.
   * ``dense`` — legacy (max_slots, max_seq) dense cache; retained for
-    recurrent/hybrid, encoder-decoder and mixed-pattern architectures.
+    recurrent/hybrid architectures.
 """
 from __future__ import annotations
 
@@ -56,11 +60,16 @@ class DecodeEngine:
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
-        self.alloc = PagedAllocator(n_pages=n_pages, page_size=page_size,
-                                    window=cfg.sliding_window)
+        self.spec = backend_for(cfg, backend)
+        self.backend = self.spec.backend
+        self.enc_ctx = self.spec.cross_ctx
+        self.alloc = PagedAllocator(
+            n_pages=n_pages, page_size=page_size,
+            window=cfg.sliding_window,
+            cross_tokens=self.enc_ctx if self.spec.cross == "pages"
+            else 0)
         self.scheduler = DecodeScheduler(self.alloc, policy=policy,
                                          max_batch=max_slots)
-        self.backend = backend_for(cfg, backend).backend
         self.page_size = page_size
         self.slots: Dict[int, SlotState] = {}
         self._pending: Dict[str, PrefilledKV] = {}
@@ -71,15 +80,26 @@ class DecodeEngine:
             self.pool, self._trash = make_page_pool(cfg, n_pages,
                                                     page_size)
             self._bt_width = self.alloc.pages_for(max_seq)
+            self._cross_bt_width = self.alloc.cross_pages_per_request
 
-            def _decode_paged(params, toks, pos, pages, offs, bt, lens,
-                              kp, vp):
-                return M.decode_step_paged(params, cfg, toks, pos, pages,
-                                           offs, bt, lens, kp, vp)
+            if self.spec.cross == "pages":
+                def _decode_paged(params, toks, pos, pages, offs, bt,
+                                  lens, cbt, clens, kp, vp):
+                    return M.decode_step_paged(params, cfg, toks, pos,
+                                               pages, offs, bt, lens,
+                                               kp, vp, cbt, clens)
+                donate = (9, 10)
+            else:
+                def _decode_paged(params, toks, pos, pages, offs, bt,
+                                  lens, kp, vp):
+                    return M.decode_step_paged(params, cfg, toks, pos,
+                                               pages, offs, bt, lens,
+                                               kp, vp)
+                donate = (7, 8)
             # donate the pools: in-place pool update per iteration
             # instead of a full KV-pool copy (no-op on CPU)
             self._decode_paged = jax.jit(_decode_paged,
-                                         donate_argnums=(7, 8))
+                                         donate_argnums=donate)
         else:
             self.cache = M.init_cache(cfg, max_slots, max_seq)
 
@@ -126,6 +146,17 @@ class DecodeEngine:
                 pages.extend(live)
                 payload_k.append(pk.pages_k)
                 payload_v.append(pk.pages_v)
+                if self.spec.cross == "pages":
+                    # the one-shot cross payload lands in the cross
+                    # pages the admission alloc drew from the same pool
+                    ctab = self.alloc.cross_table(req.rid)
+                    assert pk.cross_k is not None and \
+                        pk.cross_k.shape[1] == len(ctab), \
+                        "cross-attention arch needs the encoder pages " \
+                        "shipped alongside the self KV"
+                    pages.extend(ctab)
+                    payload_k.append(pk.cross_k)
+                    payload_v.append(pk.cross_v)
             else:
                 self.cache = M.cache_insert(self.cache, pk.cache, slot)
             self.slots[slot] = SlotState(req=req,
@@ -174,6 +205,10 @@ class DecodeEngine:
         offs = np.zeros((ms,), np.int32)
         bt = np.full((ms, self._bt_width), trash, np.int32)
         lens = np.zeros((ms,), np.int32)
+        cross = self.spec.cross == "pages"
+        if cross:
+            cbt = np.full((ms, self._cross_bt_width), trash, np.int32)
+            clens = np.zeros((ms,), np.int32)
         for s, st in self.slots.items():
             p = st.req.prompt_len + st.req.generated
             # account the token being appended THIS iteration; the
@@ -185,10 +220,21 @@ class DecodeEngine:
             table = self.alloc.table_padded(st.req.rid, trash)
             bt[s, :len(table)] = table
             lens[s] = p + 1
-        nxt, kp, vp = self._decode_paged(
-            self.params, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(bt),
-            jnp.asarray(lens), self.pool.k, self.pool.v)
+            if cross:
+                ctab = self.alloc.cross_table(st.req.rid)
+                cbt[s, :len(ctab)] = ctab
+                clens[s] = self.enc_ctx
+        if cross:
+            nxt, kp, vp = self._decode_paged(
+                self.params, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(bt),
+                jnp.asarray(lens), jnp.asarray(cbt), jnp.asarray(clens),
+                self.pool.k, self.pool.v)
+        else:
+            nxt, kp, vp = self._decode_paged(
+                self.params, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(bt),
+                jnp.asarray(lens), self.pool.k, self.pool.v)
         self.pool = PagePool(k=kp, v=vp)
         return np.asarray(nxt)
 

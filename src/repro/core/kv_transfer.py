@@ -53,26 +53,38 @@ TS_ICI = LinkSpec(LinkType.DIRECT, 50e9, 5e-6, True)
 
 
 def kv_page_bytes(cfg: ModelConfig, n_tokens: int, page_size: int,
-                  dtype_bytes: int = 2) -> int:
+                  dtype_bytes: int = 2, enc_len: int = 0) -> int:
     """Prefilled-KV payload at PAGE granularity: the paged engines ship
     whole LIVE pages, so the wire bytes are the page contents, not the
     raw token count — this is the unit the paper's per-chunk streamed
     transfer accounts in.  Sliding-window configs only ship the
     in-window page suffix (pages that slid wholly out are freed, never
     transferred); MLA configs' per-token width is the compressed latent
-    (via ``kv_bytes_per_token``), so latent pages are ~14x narrower."""
+    (via ``kv_bytes_per_token``), so latent pages are ~14x narrower.
+
+    ``enc_len > 0`` (VLM / enc-dec archs) adds the ONE-SHOT cross-KV
+    payload: the read-only encoder pages every cross layer attends,
+    shipped once with the prefilled self KV and amortized over the whole
+    decode (the paper's prefill→decode shipping model)."""
     n = max(1, n_tokens)
     pages = -(-n // page_size)
     # same dead-page arithmetic the allocator frees by; at least one
     # live page always ships (the allocator clamps identically)
     pages = max(1, pages - window_dead_pages(n, cfg.sliding_window,
                                              page_size))
-    return kv_bytes(cfg, pages * page_size, dtype_bytes)
+    total = kv_bytes(cfg, pages * page_size, dtype_bytes)
+    if enc_len:
+        cross_pages = -(-enc_len // page_size)
+        total += (cross_pages * page_size
+                  * cfg.cross_kv_bytes_per_token(dtype_bytes))
+    return total
 
 
-def kv_bytes(cfg: ModelConfig, n_tokens: int, dtype_bytes: int = 2) -> int:
+def kv_bytes(cfg: ModelConfig, n_tokens: int, dtype_bytes: int = 2,
+             enc_len: int = 0) -> int:
     """Prefilled-KV payload for n_tokens. MLA ships the compressed latent;
-    recurrent blocks ship O(1) state (counted once, not per token)."""
+    recurrent blocks ship O(1) state (counted once, not per token);
+    ``enc_len`` encoder tokens add the one-shot cross-KV payload."""
     per_tok = cfg.kv_bytes_per_token(dtype_bytes)
     state_bytes = 0
     for kind in cfg.layer_kinds:
@@ -87,7 +99,8 @@ def kv_bytes(cfg: ModelConfig, n_tokens: int, dtype_bytes: int = 2) -> int:
             dh = ud // cfg.n_heads
             state_bytes += (cfg.n_heads * dh * dh + cfg.n_heads * dh
                             + cfg.n_heads) * 4 + 3 * ud * dtype_bytes
-    return per_tok * n_tokens + state_bytes
+    cross = enc_len * cfg.cross_kv_bytes_per_token(dtype_bytes)
+    return per_tok * n_tokens + state_bytes + cross
 
 
 class NetworkStack:
@@ -111,16 +124,18 @@ class NetworkStack:
         return t
 
     def send_kv(self, cfg: ModelConfig, n_tokens: int,
-                n_chunks: int = 1, page_size: int = 0) -> float:
+                n_chunks: int = 1, page_size: int = 0,
+                enc_len: int = 0) -> float:
         """Returns emulated completion delay (s) for a prefilled KV.
 
         ``page_size > 0`` models the paged engines' transfer: payload =
         live pages (page-aligned), which is what a one-sided page put
-        actually moves.  chunk-level granularity pays setup per chunk but
-        overlaps with prefill of later chunks: only the LAST chunk's
-        latency lands on the critical path."""
-        total = (kv_page_bytes(cfg, n_tokens, page_size) if page_size
-                 else kv_bytes(cfg, n_tokens))
+        actually moves.  ``enc_len > 0`` adds the one-shot cross-KV
+        pages (VLM / enc-dec).  chunk-level granularity pays setup per
+        chunk but overlaps with prefill of later chunks: only the LAST
+        chunk's latency lands on the critical path."""
+        total = (kv_page_bytes(cfg, n_tokens, page_size, enc_len=enc_len)
+                 if page_size else kv_bytes(cfg, n_tokens, enc_len=enc_len))
         self.bytes_sent += total
         if self.granularity == "chunk" and n_chunks > 1:
             self.transfers += n_chunks

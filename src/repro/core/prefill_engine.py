@@ -14,10 +14,13 @@ Execution backends (selected by ``core.backend.backend_for``):
     MLA latent — straight into pages.  Sliding-window configs trim
     pages back to the free list as chunks slide past them.  Finished
     requests ship ``(block table, live page contents)`` — no dense
-    cache pytree ever exists on this path.
+    cache pytree ever exists on this path.  Cross-attention archs
+    (VLM / enc-dec) also hold READ-ONLY cross pages per request: the
+    encoder K/V is scattered once on the request's first chunk, every
+    chunk attends it through a second block table, and the finished
+    request ships the cross pages alongside the self KV.
   * ``dense`` — legacy per-segment ``model.prefill`` against per-request
-    dense caches; retained for recurrent/hybrid, encoder-decoder and
-    mixed-pattern architectures.
+    dense caches; retained for recurrent/hybrid architectures.
 """
 from __future__ import annotations
 
@@ -49,8 +52,11 @@ class PrefilledKV:
     (latent, rope-key) pair (L, n_pages, page, width) for MLA — plus
     ``kv_len`` valid tokens.  The receiver installs them into its own
     pool and builds a block-table row; for sliding-window configs the
-    payload is only the O(window) in-window suffix.  Dense backend:
-    ``cache`` is a batch=1 cache pytree.
+    payload is only the O(window) in-window suffix.  Cross-attention
+    archs additionally ship ``cross_k``/``cross_v`` — the read-only
+    encoder pages (one-shot payload, amortized over the whole decode)
+    covering ``enc_len`` encoder tokens.  Dense backend: ``cache`` is a
+    batch=1 cache pytree (cross KV rides inside it as ``ck``/``cv``).
     """
     req: Request
     first_token: int             # argmax token from prefill (the 'first token')
@@ -60,6 +66,9 @@ class PrefilledKV:
     pages_k: object = None       # paged backend only
     pages_v: object = None
     kv_len: int = 0
+    cross_k: object = None       # paged cross-attention archs only
+    cross_v: object = None
+    enc_len: int = 0
 
 
 def _pow2(n: int) -> int:
@@ -102,25 +111,39 @@ class PrefillEngine:
         self.predictor = predictor
         self.chunk_size = chunk_size
         self.max_seq = max_seq
-        self.backend = backend_for(cfg, backend).backend
+        self.spec = backend_for(cfg, backend)
+        self.backend = self.spec.backend
         self.page_size = page_size
         self._chunk_queue: Deque[chunking.Chunk] = collections.deque()
         self._reqs: Dict[str, Request] = {}
         self.chunk_steps = 0         # steps that actually ran a chunk
         self.fused_calls = 0         # one per chunk on the paged backend
+        self.enc_ctx = self.spec.cross_ctx
 
         if self.backend == "paged":
-            self.alloc = PagedAllocator(n_pages=n_pages,
-                                        page_size=page_size,
-                                        window=cfg.sliding_window)
+            self.alloc = PagedAllocator(
+                n_pages=n_pages, page_size=page_size,
+                window=cfg.sliding_window,
+                cross_tokens=self.enc_ctx if self.spec.cross == "pages"
+                else 0)
             self.pool, self._trash = make_page_pool(cfg, n_pages,
                                                     page_size)
             self._bt_width = self.alloc.pages_for(max_seq)
+            self._cross_bt_width = self.alloc.cross_pages_per_request
 
-            def _prefill_paged(params, toks, qoff, kvlen, last, bt, pg,
-                               off, kp, vp):
-                return M.prefill_paged(params, cfg, toks, qoff, kvlen,
-                                       last, bt, pg, off, kp, vp)
+            if self.spec.cross == "pages":
+                def _prefill_paged(params, toks, qoff, kvlen, last, bt,
+                                   pg, off, kp, vp, enc, cbt, clen, cpg,
+                                   coff):
+                    return M.prefill_paged(params, cfg, toks, qoff,
+                                           kvlen, last, bt, pg, off, kp,
+                                           vp, enc, cbt, clen, cpg, coff)
+            else:
+                def _prefill_paged(params, toks, qoff, kvlen, last, bt,
+                                   pg, off, kp, vp):
+                    return M.prefill_paged(params, cfg, toks, qoff,
+                                           kvlen, last, bt, pg, off, kp,
+                                           vp)
             # donate the pools: XLA updates them in place instead of
             # copying the whole KV pool every chunk (no-op on CPU)
             self._prefill_paged = jax.jit(_prefill_paged,
@@ -132,6 +155,13 @@ class PrefillEngine:
                 return M.prefill(params, cfg, toks, cache,
                                  q_offset=q_offset)
             self._prefill = jax.jit(_prefill)
+
+            def _prefill_enc(params, toks, cache, q_offset, enc):
+                return M.prefill(params, cfg, toks, cache,
+                                 q_offset=q_offset, enc_embeds=enc)
+            # first chunk of a cross-attention request: also prefills
+            # the cross KV (ck/cv) from the frontend embeddings
+            self._prefill_enc = jax.jit(_prefill_enc)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -220,6 +250,14 @@ class PrefillEngine:
         bt = np.full((ns, self._bt_width), trash, np.int32)
         pg = np.full((ns, sq), trash, np.int32)
         off = np.tile(np.arange(sq, dtype=np.int32) % ps, (ns, 1))
+        cross = self.spec.cross == "pages"
+        if cross:
+            ec = self.enc_ctx
+            enc = np.zeros((ns, ec, self.cfg.d_model), np.float32)
+            cbt = np.full((ns, self._cross_bt_width), trash, np.int32)
+            clen = np.zeros((ns,), np.int32)
+            cpg = np.full((ns, ec), trash, np.int32)
+            coff = np.tile(np.arange(ec, dtype=np.int32) % ps, (ns, 1))
         for i, seg in enumerate(segs):
             req = self._reqs[seg.rid]
             if req.t_prefill_start < 0:
@@ -236,10 +274,33 @@ class PrefillEngine:
             pos = seg.req_start + np.arange(seg.length)
             pg[i, :seg.length] = table[pos // ps]
             off[i, :seg.length] = pos % ps
-        next_tok, _, kp, vp = self._prefill_paged(
-            self.params, jnp.asarray(toks), jnp.asarray(qoff),
-            jnp.asarray(kvlen), jnp.asarray(last), jnp.asarray(bt),
-            jnp.asarray(pg), jnp.asarray(off), self.pool.k, self.pool.v)
+            if cross:
+                ctab = np.asarray(self.alloc.cross_table(seg.rid),
+                                  np.int32)
+                cbt[i, :len(ctab)] = ctab
+                clen[i] = self.enc_ctx
+                if seg.req_start == 0:
+                    # one-shot cross-KV prefill: only a request's FIRST
+                    # segment scatters the encoder K/V into its cross
+                    # pages — later chunks only read them (cpg stays at
+                    # the scratch page, making the write a no-op)
+                    if req.enc_embeds is not None:
+                        enc[i] = req.enc_embeds
+                    epos = np.arange(self.enc_ctx)
+                    cpg[i] = ctab[epos // ps]
+        if cross:
+            next_tok, _, kp, vp = self._prefill_paged(
+                self.params, jnp.asarray(toks), jnp.asarray(qoff),
+                jnp.asarray(kvlen), jnp.asarray(last), jnp.asarray(bt),
+                jnp.asarray(pg), jnp.asarray(off), self.pool.k,
+                self.pool.v, jnp.asarray(enc), jnp.asarray(cbt),
+                jnp.asarray(clen), jnp.asarray(cpg), jnp.asarray(coff))
+        else:
+            next_tok, _, kp, vp = self._prefill_paged(
+                self.params, jnp.asarray(toks), jnp.asarray(qoff),
+                jnp.asarray(kvlen), jnp.asarray(last), jnp.asarray(bt),
+                jnp.asarray(pg), jnp.asarray(off), self.pool.k,
+                self.pool.v)
         self.pool = PagePool(k=kp, v=vp)
         self.fused_calls += 1
         next_tok = np.asarray(next_tok)
@@ -258,20 +319,29 @@ class PrefillEngine:
     def _finish_paged(self, req: Request, first_tok: int, now: float
                       ) -> PrefilledKV:
         n_chunks = self._note_finished(req, now)
+        enc_len = self.enc_ctx if self.spec.cross == "pages" else 0
         delay = self.network.send_kv(self.cfg, req.prompt_len,
                                      n_chunks=n_chunks,
-                                     page_size=self.page_size)
+                                     page_size=self.page_size,
+                                     enc_len=enc_len)
         req.phase = Phase.TRANSFER
         # ship the LIVE pages only: for windowed configs that is the
         # O(window) in-window suffix, exactly what the decode side's
         # window-aware allocator will hold for this request
         pages_k, pages_v = self.pool.gather(self.alloc.live_pages(req.rid))
+        cross_k = cross_v = None
+        if enc_len:
+            # plus the one-shot read-only cross pages (encoder K/V)
+            cross_k, cross_v = self.pool.gather(
+                self.alloc.cross_table(req.rid))
         self.alloc.free(req.rid)
         self._reqs.pop(req.rid)
         return PrefilledKV(req=req, first_token=first_tok,
                            transfer_delay_s=delay, n_chunks=n_chunks,
                            pages_k=pages_k, pages_v=pages_v,
-                           kv_len=req.prompt_len)
+                           kv_len=req.prompt_len,
+                           cross_k=cross_k, cross_v=cross_v,
+                           enc_len=enc_len)
 
     # -- dense backend (legacy fallback) --------------------------------
     def _step_dense(self, chunk: chunking.Chunk, now: float
@@ -285,9 +355,21 @@ class PrefillEngine:
             if req.prompt_tokens is not None:
                 toks[0] = req.prompt_tokens[
                     seg.req_start: seg.req_start + seg.length]
-            logits, cache = self._prefill(
-                self.params, jnp.asarray(toks), self._caches[seg.rid],
-                seg.req_start)
+            if self.enc_ctx and seg.req_start == 0:
+                # first chunk of a cross-attention request: prefill the
+                # cross KV (ck/cv) from the frontend embeddings (zeros
+                # for frontend-less requests — cross output is 0 then)
+                enc = np.zeros((1, self.enc_ctx, self.cfg.d_model),
+                               np.float32)
+                if req.enc_embeds is not None:
+                    enc[0] = req.enc_embeds
+                logits, cache = self._prefill_enc(
+                    self.params, jnp.asarray(toks), self._caches[seg.rid],
+                    seg.req_start, jnp.asarray(enc))
+            else:
+                logits, cache = self._prefill(
+                    self.params, jnp.asarray(toks), self._caches[seg.rid],
+                    seg.req_start)
             self._caches[seg.rid] = cache
             req.prefilled = seg.req_start + seg.length
             if req.prefilled >= req.prompt_len:
@@ -298,14 +380,15 @@ class PrefillEngine:
                       ) -> PrefilledKV:
         n_chunks = self._note_finished(req, now)
         delay = self.network.send_kv(self.cfg, req.prompt_len,
-                                     n_chunks=n_chunks)
+                                     n_chunks=n_chunks,
+                                     enc_len=self.enc_ctx)
         req.phase = Phase.TRANSFER
         first_tok = int(np.asarray(jnp.argmax(logits[0, -1])))
         cache = self._caches.pop(req.rid)
         self._reqs.pop(req.rid)
         return PrefilledKV(req=req, cache=cache, first_token=first_tok,
                            transfer_delay_s=delay, n_chunks=n_chunks,
-                           kv_len=req.prompt_len)
+                           kv_len=req.prompt_len, enc_len=self.enc_ctx)
 
     # -- shared finish bookkeeping --------------------------------------
     def _note_finished(self, req: Request, now: float) -> int:

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
+from repro.kernels.paged_cross_decode_attention import (
+    paged_cross_decode_attention)
 from repro.kernels.paged_decode_attention import paged_decode_attention
 from repro.kernels.paged_mla_decode_attention import paged_mla_decode_attention
 from repro.kernels.paged_prefill_attention import paged_prefill_attention
@@ -56,6 +58,14 @@ def decode_attention(q, k_pool, v_pool, block_table, lens, *,
     return paged_decode_attention(
         q, k_pool, v_pool, block_table, jnp.asarray(lens),
         window=window, interpret=_interpret())
+
+
+def cross_decode_attention(q, k_pool, v_pool, block_table, enc_lens):
+    """Non-causal decode attention over the read-only cross pages
+    (encoder K/V) via the per-request cross block table."""
+    return paged_cross_decode_attention(
+        q, k_pool, v_pool, block_table, jnp.asarray(enc_lens),
+        interpret=_interpret())
 
 
 def mla_decode_attention(q_lat, q_rope, ckv_pool, kr_pool, block_table,

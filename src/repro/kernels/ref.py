@@ -80,6 +80,26 @@ def ref_paged_decode_attention(q, k_pool, v_pool, block_table, lens, *,
     return out.reshape(b, h, hd_v).astype(q.dtype)
 
 
+def ref_paged_cross_decode_attention(q, k_pool, v_pool, block_table,
+                                     enc_lens):
+    """Oracle for kernels.paged_cross_decode_attention: gather the cross
+    pages densely, non-causal masked attention over the encoder length."""
+    b, h, hd = q.shape
+    n_pages, page, kvh, hd_v = v_pool.shape
+    n_slots = block_table.shape[1]
+    rep = h // kvh
+    k = k_pool[block_table].reshape(b, n_slots * page, kvh, hd)
+    v = v_pool[block_table].reshape(b, n_slots * page, kvh, hd_v)
+    qf = q.astype(jnp.float32).reshape(b, kvh, rep, hd)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qf, k.astype(jnp.float32)) * hd ** -0.5
+    tok = jnp.arange(n_slots * page)
+    mask = tok[None, :] < enc_lens[:, None]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd_v).astype(q.dtype)
+
+
 def ref_paged_mla_decode_attention(q_lat, q_rope, ckv_pool, kr_pool,
                                    block_table, lens, *, scale: float,
                                    window: int = 0):

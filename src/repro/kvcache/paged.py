@@ -51,16 +51,24 @@ class PagedAllocator:
     (the slot entry becomes ``None`` — engines point it at the scratch
     page), so a windowed request holds O(window) physical pages while its
     logical table keeps absolute slot indexing for the kernels.
+
+    ``cross_tokens > 0`` (VLM / enc-dec archs) makes every request also
+    hold a READ-ONLY cross-attention block table: ``alloc`` draws the
+    cross pages from the same free list, they are never appended to or
+    trimmed (the encoder output is fixed for the request's lifetime),
+    and ``free`` returns them exactly once.
     """
     n_pages: int
     page_size: int
     window: int = 0
+    cross_tokens: int = 0
 
     def __post_init__(self):
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
         self._tables: Dict[str, List[Optional[int]]] = {}
         self._lens: Dict[str, int] = {}
         self._trimmed: Dict[str, int] = {}   # leading slots already None
+        self._cross: Dict[str, List[int]] = {}
         self.swap_events = 0
 
     # -- queries -------------------------------------------------------
@@ -88,6 +96,12 @@ class PagedAllocator:
         window-aware (the admission policies budget against this)."""
         return self.pages_for(n_tokens) - self.dead_slots(n_tokens)
 
+    @property
+    def cross_pages_per_request(self) -> int:
+        """Read-only cross-KV pages every request holds for its whole
+        lifetime (0 for self-attention-only archs)."""
+        return self.pages_for(self.cross_tokens)
+
     def table(self, rid: str) -> List[Optional[int]]:
         """Block-table row: absolute slot indexing; ``None`` marks slots
         whose pages slid out of the window (engines map them to the
@@ -99,6 +113,11 @@ class PagedAllocator:
         page ``trash`` — the form the engines feed the kernels (which
         never read those slots: page-skip + masks)."""
         return [trash if p is None else p for p in self._tables[rid]]
+
+    def cross_table(self, rid: str) -> List[int]:
+        """The request's read-only cross-attention block table — distinct
+        from the self-attention table, never grown or trimmed."""
+        return list(self._cross[rid])
 
     def live_pages(self, rid: str) -> List[int]:
         return [p for p in self._tables[rid] if p is not None]
@@ -125,12 +144,16 @@ class PagedAllocator:
         dead = 0 if materialize_all else min(self.dead_slots(n_tokens),
                                              total - 1)
         need = total - dead
-        if need > len(self._free):
-            raise OutOfPages(f"{rid}: need {need}, free {len(self._free)}")
+        cross = self.cross_pages_per_request
+        if need + cross > len(self._free):
+            raise OutOfPages(f"{rid}: need {need + cross}, "
+                             f"free {len(self._free)}")
         pages = [self._free.pop() for _ in range(need)]
         self._tables[rid] = [None] * dead + pages
         self._lens[rid] = n_tokens
         self._trimmed[rid] = dead
+        if cross:
+            self._cross[rid] = [self._free.pop() for _ in range(cross)]
         return self.table(rid)
 
     def append_token(self, rid: str) -> int:
@@ -179,13 +202,17 @@ class PagedAllocator:
                           if p is not None)
         self._lens.pop(rid)
         self._trimmed.pop(rid, None)
+        # cross pages return to the free list exactly once: pop() makes a
+        # double free a loud KeyError via _tables above, and the cross
+        # list is dropped with the table entry
+        self._free.extend(reversed(self._cross.pop(rid, [])))
 
     def can_admit(self, n_tokens: int, *,
                   materialize_all: bool = False) -> bool:
         n = max(1, n_tokens)
         need = (self.pages_for(n) if materialize_all
                 else max(1, self.pages_for_request(n)))
-        return need <= len(self._free)
+        return need + self.cross_pages_per_request <= len(self._free)
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +229,11 @@ class PagePool:
     ops below are trailing-dim generic, so scatter/gather/install and
     the page-granular KV transfer work identically for both layouts —
     the latent pages are just ~an order of magnitude narrower.
+
+    Cross-attention KV (VLM / enc-dec archs) shares the GQA pool: the
+    encoder K/V per cross layer has the same (page, kvh, hd) tile shape,
+    so cross pages are ordinary pool pages referenced by a second,
+    read-only block table per request (see ``PagedAllocator``).
     """
     k: jnp.ndarray
     v: jnp.ndarray

@@ -636,5 +636,52 @@ def cross_forward(p: dict, cfg: ModelConfig, x: jnp.ndarray,
     b, s, _ = x.shape
     h, hd = cfg.n_heads, cfg.resolved_head_dim
     q = (x @ p["wq"]).reshape(b, s, h, hd)
-    out = flash_attn(q, k, v, causal=False)
+    # kv_len masks the zero padding flash_attn's kv blocking appends
+    # (enc_ctx is usually far below block_kv) — without it the pad
+    # tokens dilute the non-causal softmax
+    out = flash_attn(q, k, v, causal=False, kv_len=k.shape[1])
     return out.reshape(b, s, -1) @ p["wo"]
+
+
+def cross_prefill_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                        k_layer: jnp.ndarray, v_layer: jnp.ndarray, *,
+                        enc_h, cross_bt, cross_len, cross_pg, cross_off):
+    """Cross-attention sublayer of one fused paged prefill chunk.
+
+    x: (segs, sq, d) normed decoder activations; enc_h: (segs, enc_ctx,
+    d) encoder output per segment; cross_bt: (segs, cross_slots) the
+    read-only cross block table; cross_pg/cross_off: (segs, enc_ctx)
+    physical (page, in-page) slot for the one-shot cross-KV write —
+    segments past their request's first chunk point these at the scratch
+    page, so the encoder K/V is prefilled exactly once per request.
+    The read is non-causal: every decoder query attends all ``cross_len``
+    encoder tokens through the block table.
+    Returns (attn_out, k_layer, v_layer)."""
+    from repro.kernels import ops
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    ck, cv = cross_kv(p, cfg, enc_h)
+    k_layer = k_layer.at[cross_pg, cross_off].set(ck.astype(k_layer.dtype))
+    v_layer = v_layer.at[cross_pg, cross_off].set(cv.astype(v_layer.dtype))
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    out = ops.prefill_attention(
+        q, k_layer, v_layer, cross_len,
+        jnp.zeros_like(cross_len), block_table=cross_bt, causal=False)
+    return out.reshape(b, s, -1) @ p["wo"], k_layer, v_layer
+
+
+def cross_decode_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                       k_layer: jnp.ndarray, v_layer: jnp.ndarray, *,
+                       cross_bt, cross_len):
+    """Batched one-token cross attention against the read-only cross
+    pages — no scatter: the encoder K/V was installed at admission and
+    never changes.  x: (slots, 1, d); cross_bt: (slots, cross_slots);
+    cross_len: (slots,) encoder tokens per slot (0 for empty slots).
+    Returns (attn_out, k_layer, v_layer)."""
+    from repro.kernels import ops
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    out = ops.cross_decode_attention(q[:, 0], k_layer, v_layer, cross_bt,
+                                     cross_len)
+    return out.reshape(b, 1, -1) @ p["wo"], k_layer, v_layer

@@ -130,6 +130,24 @@ class ModelConfig:
         return all(k in (RGLRU, SLSTM, MLSTM) for k in self.layer_kinds)
 
     @property
+    def n_cross_layers(self) -> int:
+        """Layers carrying a cross-attention sublayer (VLM / enc-dec)."""
+        return sum(1 for k in self.layer_kinds if k == CROSS_ATTN)
+
+    @property
+    def cross_ctx(self) -> int:
+        """Encoder tokens every cross-attention layer attends (frames for
+        whisper, patches for the VLM); 0 when the arch has no frontend."""
+        return self.encoder.n_ctx if self.encoder is not None else 0
+
+    def cross_kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        """Cross-KV bytes per ENCODER token across all cross layers —
+        the one-shot payload disaggregation ships alongside the growing
+        self-attention KV (amortized over the whole decode)."""
+        per = 2 * self.n_kv_heads * self.resolved_head_dim
+        return self.n_cross_layers * per * dtype_bytes
+
+    @property
     def subquadratic(self) -> bool:
         """True if no block needs a full-length self-attention KV
         (long-context capable).  CROSS_ATTN blocks carry full causal

@@ -23,10 +23,12 @@ a shared device page pool instead of per-request dense caches):
                            dense fallback's serving step)
 
 The paged backend covers every uniform-attention config — GQA and MLA
-(latent pages), full and sliding-window attention.  The dense cache
-path (``init_cache``/``prefill``/``decode_step``) remains the substrate
-for training, recurrent/hybrid and encoder-decoder architectures, and
-the coupled vLLM-style baseline.
+(latent pages), full and sliding-window attention, and cross-attention
+archs (VLM / encoder-decoder) whose encoder K/V lives in read-only
+cross pages of the same pool.  The dense cache path
+(``init_cache``/``prefill``/``decode_step``) remains the substrate for
+training, recurrent/hybrid architectures, and the coupled vLLM-style
+baseline.
 """
 from __future__ import annotations
 
@@ -40,7 +42,7 @@ from repro.models import attention as A
 from repro.models import blocks as B
 from repro.models import mlp as MLP
 from repro.models import sharding as SH
-from repro.models.config import ATTN, ModelConfig
+from repro.models.config import ATTN, CROSS_ATTN, ModelConfig
 
 
 def _dtype(cfg: ModelConfig):
@@ -279,7 +281,9 @@ def encoder_forward(params, cfg: ModelConfig, enc_embeds):
         b, s, _ = n.shape
         positions = jnp.arange(s)[None, :]
         q, k, v = A.gqa_qkv(p["attn"], cfg, n, positions)
-        a = A.flash_attn(q, k, v, causal=False)
+        # kv_len masks the zero padding the kv blocking appends — the
+        # bidirectional softmax must span exactly the s real frames
+        a = A.flash_attn(q, k, v, causal=False, kv_len=s)
         h = h + a.reshape(b, s, -1) @ p["attn"]["wo"]
         n2 = B.rms_norm(h, p["norm2"], cfg.norm_eps)
         from repro.models import mlp as M
@@ -372,20 +376,33 @@ def decode_step_greedy(params, cfg: ModelConfig, tokens, cache, pos):
 # ---------------------------------------------------------------------------
 def paged_supported(cfg: ModelConfig) -> bool:
     """True if the paged backend can serve this config: uniform
-    self-attention layers (GQA or MLA, full or sliding-window) over a
-    page pool.  Recurrent/hybrid, encoder-decoder and mixed-pattern
-    archs stay on the dense path."""
-    return (not cfg.is_encoder_decoder
-            and all(k == ATTN for k in cfg.layer_kinds))
+    attention layers over a page pool — plain self-attention (GQA or
+    MLA, full or sliding-window) and CROSS_ATTN layers whose encoder
+    K/V lives in read-only cross pages of the same pool (VLM and
+    encoder-decoder archs).  Only recurrent/hybrid archs stay on the
+    dense path; MLA+cross has no arch in the pool and is unhandled."""
+    kinds = set(cfg.layer_kinds)
+    if not kinds <= {ATTN, CROSS_ATTN}:
+        return False
+    return not (cfg.mla is not None and CROSS_ATTN in kinds)
 
 
-def _paged_attn_block(p, cfg: ModelConfig, x, k_layer, v_layer, attn):
-    """One ATTN block (norm, attention-vs-pool, MLP/MoE) on the paged
-    path.  ``attn(p_attn, h, k_layer, v_layer)`` performs the pool
-    scatter + kernel call for the current mode."""
+def _paged_attn_block(p, cfg: ModelConfig, x, k_layer, v_layer, attn,
+                      cross=None):
+    """One ATTN/CROSS_ATTN block (norm, attention-vs-pool, optional
+    cross-attention-vs-cross-pages, MLP/MoE) on the paged path.
+    ``attn(p_attn, h, k_layer, v_layer)`` performs the pool scatter +
+    kernel call for the current mode; ``cross(p_cross, hc, k_layer,
+    v_layer)`` does the same against the request's read-only cross
+    block table (CROSS_ATTN blocks only — the ``"cross" in p`` check is
+    structural, so non-cross layers trace no cross code)."""
     h = B.rms_norm(x, p["norm1"], cfg.norm_eps)
     a, k_layer, v_layer = attn(p["attn"], h, k_layer, v_layer)
     x = x + a
+    if cross is not None and "cross" in p:
+        hc = B.rms_norm(x, p["norm_c"], cfg.norm_eps)
+        ac, k_layer, v_layer = cross(p["cross"], hc, k_layer, v_layer)
+        x = x + ac
     h2 = B.rms_norm(x, p["norm2"], cfg.norm_eps)
     if "moe" in p:
         m, _ = MLP.moe_forward(p["moe"], cfg, h2)
@@ -394,12 +411,15 @@ def _paged_attn_block(p, cfg: ModelConfig, x, k_layer, v_layer, attn):
     return x + m, k_layer, v_layer
 
 
-def _run_layers_paged(params, cfg: ModelConfig, h, k_pool, v_pool, attn):
+def _run_layers_paged(params, cfg: ModelConfig, h, k_pool, v_pool, attn,
+                      cross=None):
     """Layer runner over the per-layer page pools — (L, n_pages, page,
     kvh, hd) K/V for GQA, (L, n_pages, page, width) (latent, rope-key)
     for MLA: prefix and suffix unrolled, body scanned — pool rows are
     indexed by absolute layer id so the engines' PagePool layout is
-    position-stable."""
+    position-stable.  CROSS_ATTN layers additionally run ``cross``
+    against the same layer slice (self and cross pages share the pool;
+    the tables are distinct)."""
     npre = len(cfg.prefix)
     pat = len(cfg.pattern)
 
@@ -409,7 +429,7 @@ def _run_layers_paged(params, cfg: ModelConfig, h, k_pool, v_pool, attn):
         v_layer = jax.lax.dynamic_index_in_dim(v_pool, layer, 0,
                                                keepdims=False)
         h, k_layer, v_layer = _paged_attn_block(p_block, cfg, h, k_layer,
-                                                v_layer, attn)
+                                                v_layer, attn, cross)
         h = SH.act_constrain(h)
         k_pool = jax.lax.dynamic_update_index_in_dim(k_pool, k_layer,
                                                      layer, 0)
@@ -438,7 +458,8 @@ def _run_layers_paged(params, cfg: ModelConfig, h, k_pool, v_pool, attn):
 
 def prefill_paged(params, cfg: ModelConfig, tokens, q_offset, kv_len,
                   last_idx, block_tables, pages_idx, offs_idx,
-                  k_pool, v_pool):
+                  k_pool, v_pool, enc_embeds=None, cross_bt=None,
+                  cross_len=None, cross_pg=None, cross_off=None):
     """One WHOLE fixed-size chunk as a single fused call (paper §3.3.3).
 
     The chunk's segments — slices of *different* requests — are packed on
@@ -453,6 +474,14 @@ def prefill_paged(params, cfg: ModelConfig, tokens, q_offset, kv_len,
     block_tables: (segs, n_slots) physical page ids (pad slots -> scratch
     page); pages_idx/offs_idx: (segs, sq) physical slot per token;
     k_pool/v_pool: (L, n_pages, page, kvh, hd).
+
+    Cross-attention archs (VLM / enc-dec) thread a SECOND block table:
+    enc_embeds: (segs, enc_ctx, d) frontend embeddings (run through the
+    encoder stack for enc-dec archs); cross_bt: (segs, cross_slots)
+    read-only cross pages; cross_len: (segs,) valid encoder tokens;
+    cross_pg/cross_off: (segs, enc_ctx) one-shot cross-KV write slots
+    (scratch page for every chunk after a request's first).
+
     Returns (next_tokens (segs,) int32, last_logits (segs, V),
     k_pool, v_pool) — next_tokens[i] is only meaningful for segments that
     complete their request's prompt.
@@ -470,8 +499,19 @@ def prefill_paged(params, cfg: ModelConfig, tokens, q_offset, kv_len,
             pages_idx=pages_idx, offs_idx=offs_idx,
             window=cfg.sliding_window)
 
+    cross = None
+    if enc_embeds is not None:
+        enc_h = (encoder_forward(params, cfg, enc_embeds)
+                 if cfg.is_encoder_decoder else enc_embeds)
+
+        def cross(p, x, k_layer, v_layer):
+            return A.cross_prefill_paged(
+                p, cfg, x, k_layer, v_layer, enc_h=enc_h,
+                cross_bt=cross_bt, cross_len=cross_len,
+                cross_pg=cross_pg, cross_off=cross_off)
+
     h, k_pool, v_pool = _run_layers_paged(params, cfg, h, k_pool, v_pool,
-                                          attn)
+                                          attn, cross)
     last_h = jnp.take_along_axis(h, last_idx[:, None, None], axis=1)
     logits = _head(params, cfg, last_h)            # (segs, 1, V)
     next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
@@ -479,14 +519,19 @@ def prefill_paged(params, cfg: ModelConfig, tokens, q_offset, kv_len,
 
 
 def decode_step_paged(params, cfg: ModelConfig, tokens, pos, pages, offs,
-                      block_tables, lens, k_pool, v_pool):
+                      block_tables, lens, k_pool, v_pool,
+                      cross_bt=None, cross_len=None):
     """Full-slot-batch decode iteration against the shared page pool.
 
     tokens: (slots, 1) last emitted token per slot; pos: (slots,) append
     position (== tokens already cached); pages/offs: (slots,) physical
     slot of the appended token (dead slots -> scratch page);
     block_tables: (slots, n_slots); lens: (slots,) valid tokens including
-    the append.  Token selection (argmax) stays on device: returns
+    the append.  Cross-attention archs also stream the request's
+    read-only cross pages: cross_bt: (slots, cross_slots); cross_len:
+    (slots,) encoder tokens per slot — no cross scatter ever happens at
+    decode (the pages were installed once at admission).  Token
+    selection (argmax) stays on device: returns
     (next_tokens (slots,) int32, k_pool, v_pool).
     """
     h = _embed(params, cfg, tokens, pos[:, None])
@@ -499,8 +544,15 @@ def decode_step_paged(params, cfg: ModelConfig, tokens, pos, pages, offs,
             block_tables=block_tables, lens=lens,
             window=cfg.sliding_window)
 
+    cross = None
+    if cross_bt is not None:
+        def cross(p, x, k_layer, v_layer):
+            return A.cross_decode_paged(p, cfg, x, k_layer, v_layer,
+                                        cross_bt=cross_bt,
+                                        cross_len=cross_len)
+
     h, k_pool, v_pool = _run_layers_paged(params, cfg, h, k_pool, v_pool,
-                                          attn)
+                                          attn, cross)
     logits = _head(params, cfg, h)                 # (slots, 1, V)
     next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
     return next_tok, k_pool, v_pool

@@ -25,6 +25,11 @@ class Request:
     arrival: float = 0.0
     sla_ms: float = 0.0
     prompt_tokens: Optional[np.ndarray] = None
+    # frontend embeddings for cross-attention archs (whisper frames /
+    # VLM patches): (enc_ctx, d_model) float32; None = no-frontend
+    # request (the engines substitute zeros, which makes cross-attention
+    # output exactly zero on both backends)
+    enc_embeds: Optional[np.ndarray] = None
     # --- scheduling state ---
     phase: Phase = Phase.WAITING
     predicted_bucket: int = -1           # length-range bucket (§3.3.2)

@@ -199,7 +199,8 @@ class DisaggSimulator:
                 n_chunks = chunking.chunks_for(req.prompt_len,
                                                self.chunk_size)
                 delay = self.network.send_kv(self.cfg, req.prompt_len,
-                                             n_chunks=n_chunks)
+                                             n_chunks=n_chunks,
+                                             enc_len=self.cfg.cross_ctx)
                 req.phase = Phase.TRANSFER
                 p.reqs.pop(req.rid)
                 self._push(self._now + delay, "kv_arrive", (req, did))

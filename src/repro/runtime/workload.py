@@ -34,9 +34,13 @@ def _lognormal(rng, median, sigma, size):
 def generate(workload: str, n: int, *, seed: int = 0,
              arrival_rate: Optional[float] = None,
              max_prompt: int = 2048, max_decode: int = 2048,
-             vocab_size: int = 0) -> List[Request]:
+             vocab_size: int = 0, enc_ctx: int = 0,
+             enc_dim: int = 0) -> List[Request]:
     """workload in {LPLD, LPHD, HPLD, HPHD, Mixed}. ``arrival_rate`` in
-    req/s (None = all arrive at t=0, the paper's batch-of-128 setup)."""
+    req/s (None = all arrive at t=0, the paper's batch-of-128 setup).
+    ``enc_ctx``/``enc_dim`` > 0 attach synthetic frontend embeddings
+    (whisper frames / VLM patches) of shape (enc_ctx, enc_dim) per
+    request — the stub-frontend input cross-attention archs consume."""
     rng = np.random.default_rng(seed)
     if workload == "Mixed":
         names = list(_MIX_WEIGHTS)
@@ -56,9 +60,11 @@ def generate(workload: str, n: int, *, seed: int = 0,
             t += rng.exponential(1.0 / arrival_rate)
         toks = (rng.integers(1, vocab_size, size=plen).astype(np.int32)
                 if vocab_size else None)
+        enc = (rng.standard_normal((enc_ctx, enc_dim)).astype(np.float32)
+               if enc_ctx and enc_dim else None)
         reqs.append(Request(rid=f"r{i:05d}", prompt_len=plen,
                             decode_len=dlen, arrival=t,
-                            prompt_tokens=toks))
+                            prompt_tokens=toks, enc_embeds=enc))
     return reqs
 
 

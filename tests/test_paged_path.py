@@ -231,13 +231,15 @@ def mla_setup():
 
 def test_backend_for_matrix():
     """Single-source backend selection: every uniform-attention arch —
-    GQA, sliding-window, MLA — resolves to the paged backend; recurrent/
-    hybrid and encoder-decoder stay dense.  Both engines construct
-    through backend_for and must agree with it."""
+    GQA, sliding-window, MLA, and the cross-attention VLM/enc-dec pair —
+    resolves to the paged backend; only recurrent/hybrid archs stay
+    dense.  Both engines construct through backend_for and must agree
+    with it."""
     from repro.core.backend import backend_for
     gqa = get_smoke_config("qwen2_0_5b")
     assert backend_for(gqa).backend == "paged"
     assert backend_for(gqa).layout == "gqa"
+    assert backend_for(gqa).cross == "none"
     win = dataclasses.replace(get_smoke_config("mistral_nemo_12b"),
                               sliding_window=6)
     assert (backend_for(win).backend, backend_for(win).window) \
@@ -246,7 +248,11 @@ def test_backend_for_matrix():
     assert backend_for(mla).layout == "latent"
     assert backend_for(mla).token_width \
         == mla.mla.kv_lora_rank + mla.mla.qk_rope_head_dim
-    for dense_arch in ("recurrentgemma_9b", "xlstm_1_3b", "whisper_tiny"):
+    for cross_arch in ("whisper_tiny", "llama_3_2_vision_11b"):
+        spec = backend_for(get_smoke_config(cross_arch))
+        assert (spec.backend, spec.cross) == ("paged", "pages"), cross_arch
+        assert spec.cross_ctx > 0 and spec.n_cross_layers > 0
+    for dense_arch in ("recurrentgemma_9b", "xlstm_1_3b"):
         spec = backend_for(get_smoke_config(dense_arch))
         assert spec.backend == "dense", dense_arch
         with pytest.raises(ValueError):

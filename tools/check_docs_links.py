@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Check that relative markdown links in README/docs resolve.
+
+Scans every tracked ``*.md`` under the repo root, extracts
+``[text](target)`` links, and verifies that each relative target (no
+URL scheme, no pure ``#anchor``) exists on disk — files AND directories
+count; ``#section`` suffixes are stripped.  Exits non-zero listing every
+broken link, so the CI docs job fails fast when a doc rename breaks the
+front door.
+
+    python tools/check_docs_links.py [root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", "__pycache__", ".claude", "node_modules"}
+
+
+def md_files(root: pathlib.Path):
+    for path in sorted(root.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.name for p in path.parents):
+            yield path
+
+
+def check(root: pathlib.Path) -> list:
+    broken = []
+    for md in md_files(root):
+        for target in LINK_RE.findall(md.read_text(encoding="utf-8")):
+            if "://" in target or target.startswith(("mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (md.parent / rel).resolve()
+            if not resolved.exists():
+                broken.append((md.relative_to(root), target))
+    return broken
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".")
+    broken = check(root.resolve())
+    if broken:
+        for md, target in broken:
+            print(f"BROKEN  {md}: ({target})")
+        return 1
+    print(f"all relative markdown links resolve under {root.resolve()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
