@@ -6,8 +6,9 @@ import copy
 import time
 
 from benchmarks.common import emit, opt13b_cost
-from repro.runtime.simulator import CoupledSimulator, DisaggSimulator
+from repro.runtime.simulator import CoupledSimulator
 from repro.runtime.workload import generate
+from repro.serving import Cluster
 
 PAPER = {  # (dTTFT %, dJCT %, perf/$ x) from §5.1
     "LPLD": (44, 40, 1.4), "LPHD": (97, 47, 2.4), "HPLD": (-9, 23, 0.86),
@@ -22,9 +23,9 @@ def run(n_requests: int = 128, seed: int = 0):
         t0 = time.perf_counter()
         ra = CoupledSimulator(cfg, cost, n_instances=2, prefill_batch=16,
                               max_batch=16).run(copy.deepcopy(reqs))
-        rb = DisaggSimulator(cfg, cost, n_prefill=1, n_decode=1,
-                             max_batch=64, enable_flip=True,
-                             flip_idle_s=1.0).run(copy.deepcopy(reqs))
+        rb = Cluster(cfg, runtime="sim", cost=cost, n_prefill=1,
+                     n_decode=1, max_batch=64, enable_flip=True,
+                     flip_idle_s=1.0).serve(copy.deepcopy(reqs))
         us = (time.perf_counter() - t0) * 1e6
         ma, mb = ra.metrics, rb.metrics
         d_ttft = 100 * (1 - mb["avg_ttft"] / ma["avg_ttft"])

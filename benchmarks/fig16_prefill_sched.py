@@ -4,8 +4,9 @@ import copy
 import time
 
 from benchmarks.common import emit, opt13b_cost
-from repro.runtime.simulator import CoupledSimulator, DisaggSimulator
+from repro.runtime.simulator import CoupledSimulator
 from repro.runtime.workload import generate
+from repro.serving import Cluster
 
 
 def run(n=128):
@@ -19,9 +20,9 @@ def run(n=128):
     rows.append(("fig16_vllm_fixed_batch", (time.perf_counter()-t0)*1e6,
                  f"avg_ttft_s={base_ttft:.2f}"))
     for policy in ["fcfs", "sjf", "ljf"]:
-        r = DisaggSimulator(cfg, cost, n_prefill=1, n_decode=1,
-                            prefill_policy=policy, sched_batch=16,
-                            max_batch=64).run(copy.deepcopy(reqs0))
+        r = Cluster(cfg, runtime="sim", cost=cost, n_prefill=1,
+                    n_decode=1, prefill_policy=policy, sched_batch=16,
+                    max_batch=64).serve(copy.deepcopy(reqs0))
         ttft = r.metrics["avg_ttft"]
         rows.append((f"fig16_chunked_{policy}", 0.0,
                      f"avg_ttft_s={ttft:.2f};"
@@ -29,9 +30,9 @@ def run(n=128):
     # PrefillSchedBatch sweep under SJF
     sjf16 = None
     for sb in [16, 32, 64, 128]:
-        r = DisaggSimulator(cfg, cost, n_prefill=1, n_decode=1,
-                            prefill_policy="sjf", sched_batch=sb,
-                            max_batch=64).run(copy.deepcopy(reqs0))
+        r = Cluster(cfg, runtime="sim", cost=cost, n_prefill=1,
+                    n_decode=1, prefill_policy="sjf", sched_batch=sb,
+                    max_batch=64).serve(copy.deepcopy(reqs0))
         ttft = r.metrics["avg_ttft"]
         if sb == 16:
             sjf16 = ttft

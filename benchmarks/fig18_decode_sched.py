@@ -6,8 +6,8 @@ import time
 
 from benchmarks.common import emit, opt13b_cost
 from repro.core.predictor import OraclePredictor
-from repro.runtime.simulator import DisaggSimulator
 from repro.runtime.workload import generate
+from repro.serving import Cluster
 
 
 def run(n=256):
@@ -18,10 +18,11 @@ def run(n=256):
     for acc, acc_tag in [(0.749, "acc200"), (1.0, "acc100")]:
         for policy in ["greedy", "reserve-static", "reserve-dynamic"]:
             t0 = time.perf_counter()
-            r = DisaggSimulator(
-                cfg, cost, n_prefill=1, n_decode=1, max_batch=64,
-                n_pages=1024, page_size=16, decode_policy=policy,
-                predictor=OraclePredictor(acc, seed=3)).run(
+            r = Cluster(
+                cfg, runtime="sim", cost=cost, n_prefill=1, n_decode=1,
+                max_batch=64, n_pages=1024, page_size=16,
+                decode_policy=policy,
+                predictor=OraclePredictor(acc, seed=3)).serve(
                     copy.deepcopy(reqs0))
             results[(acc_tag, policy)] = r
             rows.append((

@@ -5,9 +5,9 @@ import copy
 import time
 
 from benchmarks.common import emit, opt13b_cost
-from repro.runtime.simulator import DisaggSimulator
-from repro.runtime.workload import generate
 from repro.core.sched.flip import Role
+from repro.runtime.workload import generate
+from repro.serving import Cluster
 
 
 def run():
@@ -17,10 +17,11 @@ def run():
         reqs0 = generate("Mixed", 32 * n_dec, seed=4)
         for policy in ["power2", "random", "imbalance"]:
             t0 = time.perf_counter()
-            sim = DisaggSimulator(cfg, cost, n_prefill=1, n_decode=n_dec,
-                                  max_batch=64, dispatch_policy=policy)
-            r = sim.run(copy.deepcopy(reqs0))
-            dec_busy = [i.busy for i in sim.instances
+            cl = Cluster(cfg, runtime="sim", cost=cost, n_prefill=1,
+                         n_decode=n_dec, max_batch=64,
+                         dispatch_policy=policy)
+            r = cl.serve(copy.deepcopy(reqs0))
+            dec_busy = [i.busy for i in cl.instances
                         if i.flip.role == Role.DECODE]
             rows.append((
                 f"fig19_{policy}_n={n_dec}",

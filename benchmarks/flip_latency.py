@@ -6,8 +6,8 @@ import time
 
 from benchmarks.common import emit, opt13b_cost
 from repro.core.sched.flip import FlipMachine, Role
-from repro.runtime.simulator import DisaggSimulator
 from repro.runtime.workload import generate
+from repro.serving import Cluster
 
 
 def run():
@@ -22,8 +22,8 @@ def run():
                  f"flip_latency_ms={1e3*0.006:.0f};paper_ms=5-7"))
     cfg, cost = opt13b_cost()
     reqs = generate("LPHD", 96, seed=0)
-    r = DisaggSimulator(cfg, cost, n_prefill=1, n_decode=1, max_batch=64,
-                        enable_flip=True, flip_idle_s=1.0).run(
+    r = Cluster(cfg, runtime="sim", cost=cost, n_prefill=1, n_decode=1,
+                max_batch=64, enable_flip=True, flip_idle_s=1.0).serve(
         copy.deepcopy(reqs))
     rows.append(("flip_under_load", 0.0,
                  f"flips={r.flips};completed={r.metrics['n']}"))

@@ -16,6 +16,11 @@ plus the harness CSV rows.  Five scenarios cover every paged layout:
   * ``encdec``   — whisper enc-dec: every decoder layer cross-attends
                    the encoder output through cross pages
 
+A sixth scenario, ``cluster``, serves the same workload through the
+unified serving API (``repro.serving.Cluster``, engine runtime, 2
+prefill + 2 decode instances) so the BENCH_*.json trajectory tracks
+real-engine multi-instance cluster throughput per PR.
+
 NOTE: on CPU the Pallas kernels execute in ``interpret=True`` mode, so
 absolute wall times here track dispatch/bookkeeping, not kernel speed —
 the JSON exists to anchor the perf trajectory (same workload, both
@@ -55,7 +60,7 @@ def _serve(cfg, params, reqs, backend):
         if pe.idle() and de.idle():         # not hang the harness
             break
         for pk in pe.step(t):
-            de.receive(pk)
+            de.receive(pk, now=t)
         de.admit(t)
         for f in de.step(t):
             out[f.req.rid] = f.tokens
@@ -72,6 +77,37 @@ def _serve(cfg, params, reqs, backend):
         "prefill_chunks": pe.chunk_steps,
         "prefill_fused_calls": pe.fused_calls,
         "decode_iterations": de.iterations,
+        "kv_bytes_sent": net.bytes_sent,
+        "outputs_digest": sorted((k, tuple(v)) for k, v in out.items()),
+    }
+
+
+def _serve_cluster(cfg, params, reqs, *, n_prefill=2, n_decode=2):
+    """The same small workload through the unified Cluster API: real
+    engines on the paged backend across multiple instances."""
+    from repro.serving import Cluster
+    net = NetworkStack()
+    cl = Cluster(cfg, runtime="engine", params=params,
+                 n_prefill=n_prefill, n_decode=n_decode,
+                 chunk_size=16, max_seq=64, page_size=8, n_pages=256,
+                 max_batch=8, network=net)
+    t0 = time.perf_counter()
+    handles = [cl.submit(request=r) for r in reqs]
+    cl.run()
+    wall = time.perf_counter() - t0
+    out = {h.rid: h.result().tokens for h in handles}
+    assert all(h.done() for h in handles), "cluster did not drain"
+    toks = sum(len(v) for v in out.values())
+    return {
+        "backend": "cluster",
+        "n_prefill": n_prefill,
+        "n_decode": n_decode,
+        "wall_s": round(wall, 4),
+        "requests": len(out),
+        "tokens": toks,
+        "tok_per_s": round(toks / wall, 2),
+        "prefill_chunks": sum(i.pe.chunk_steps for i in cl.instances),
+        "decode_iterations": sum(i.de.iterations for i in cl.instances),
         "kv_bytes_sent": net.bytes_sent,
         "outputs_digest": sorted((k, tuple(v)) for k, v in out.items()),
     }
@@ -98,11 +134,12 @@ def run(out_path=None, scenarios=None):
     rows = []
     all_scenarios = _scenarios()
     if scenarios:
-        known = {name for name, *_ in all_scenarios}
+        known = {name for name, *_ in all_scenarios} | {"cluster"}
         unknown = set(scenarios) - known
         if unknown:
             raise SystemExit(f"unknown scenarios {sorted(unknown)}; "
                              f"known: {sorted(known)}")
+    gqa_paged_digest = None
     for name, cfg, n_reqs, max_dec in all_scenarios:
         if scenarios and name not in scenarios:
             continue
@@ -112,8 +149,10 @@ def run(out_path=None, scenarios=None):
                         enc_ctx=cfg.cross_ctx, enc_dim=cfg.d_model)
         dense = _serve(cfg, params, copy.deepcopy(reqs), "dense")
         paged = _serve(cfg, params, copy.deepcopy(reqs), "paged")
-        identical = dense.pop("outputs_digest") \
-            == paged.pop("outputs_digest")
+        paged_digest = paged.pop("outputs_digest")
+        identical = dense.pop("outputs_digest") == paged_digest
+        if name == "gqa":
+            gqa_paged_digest = paged_digest
         report[name] = {
             "model": cfg.name,
             "window": cfg.sliding_window,
@@ -134,6 +173,30 @@ def run(out_path=None, scenarios=None):
                          f"kv_bytes={r['kv_bytes_sent']};"
                          f"identical={identical}"))
         assert identical, f"paged backend changed emitted tokens ({name})"
+    if not scenarios or "cluster" in scenarios:
+        # real-engine multi-instance cluster throughput (unified API);
+        # same workload/model as the gqa scenario, so when both run the
+        # emitted tokens must match the single-engine paged digest
+        gqa = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                                  dtype="float32")
+        params = M.init_params(jax.random.PRNGKey(0), gqa)
+        reqs = generate("Mixed", 6, seed=7, max_prompt=32, max_decode=6,
+                        vocab_size=gqa.vocab_size)
+        cres = _serve_cluster(gqa, params, copy.deepcopy(reqs))
+        digest = cres.pop("outputs_digest")
+        identical = (None if gqa_paged_digest is None
+                     else digest == gqa_paged_digest)
+        report["cluster"] = dict(cres, model=gqa.name,
+                                 token_identical=identical)
+        rows.append(("paged_serving_cluster_2p2d",
+                     cres["wall_s"] * 1e6
+                     / max(1, cres["decode_iterations"]),
+                     f"wall_s={cres['wall_s']};"
+                     f"tok_s={cres['tok_per_s']};"
+                     f"kv_bytes={cres['kv_bytes_sent']};"
+                     f"identical={identical}"))
+        assert identical is not False, \
+            "cluster serving changed emitted tokens vs single engine"
     print(json.dumps(report))
     if out_path:
         with open(out_path, "w") as f:

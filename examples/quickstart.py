@@ -1,24 +1,23 @@
-"""Quickstart: disaggregated serving of a small model on CPU.
+"""Quickstart: disaggregated serving of a small model on CPU through
+the unified Cluster API (docs/serving_api.md).
 
-Builds a prefill instance + a decode instance (the TetriInfer pillars:
+Builds a cluster of prefill + decode instances (the TetriInfer pillars:
 chunked prefill, length-predicted dispatch, working-set-aware decode
-admission), serves a small batch of requests end-to-end, and checks the
-output against the coupled (vLLM-style) baseline.
+admission, emulated KV transfer), submits requests with user stop
+criteria, STREAMS tokens from a handle as they are generated, cancels
+one request mid-decode, and prints per-phase timestamps.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import copy
 import dataclasses
+import itertools
 
 import jax
+import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.decode_engine import DecodeEngine
-from repro.core.predictor import OraclePredictor
-from repro.core.prefill_engine import PrefillEngine
 from repro.models import model as M
-from repro.runtime.baseline_vllm import CoupledEngine
-from repro.runtime.workload import generate
+from repro.serving import Cluster, SamplingParams
 
 
 def main():
@@ -26,47 +25,46 @@ def main():
                               dtype="float32")
     print(f"model: {cfg.name}  layers={cfg.n_layers} d={cfg.d_model}")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    reqs = generate("Mixed", 8, seed=0, max_prompt=48, max_decode=12,
-                    vocab_size=cfg.vocab_size)
-    reqs_baseline = copy.deepcopy(reqs)   # engines mutate request state
+    cluster = Cluster(cfg, runtime="engine", params=params,
+                      n_prefill=1, n_decode=1, chunk_size=16,
+                      max_seq=128, max_batch=8)
 
-    # --- TetriInfer: disaggregated prefill -> KV transfer -> decode ---
-    prefill = PrefillEngine("prefill-0", cfg, params,
-                            predictor=OraclePredictor(accuracy=0.749),
-                            chunk_size=16, max_seq=128)
-    decode = DecodeEngine("decode-0", cfg, params, max_slots=8,
-                          max_seq=128, policy="reserve-dynamic")
-    for r in reqs:
-        prefill.submit(r)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(n)).astype(np.int32)
+               for n in rng.integers(8, 48, size=6)]
 
-    outputs, t = {}, 0.0
-    while not (prefill.idle() and decode.idle()):
-        for kv in prefill.step(t):          # one fixed-size chunk / step
-            print(f"  prefilled {kv.req.rid:8s} prompt={kv.req.prompt_len:3d} "
-                  f"pred_bucket={kv.req.predicted_bucket} "
-                  f"transfer={kv.transfer_delay_s*1e6:.0f}us")
-            decode.receive(kv)
-        decode.admit(t)
-        for fin in decode.step(t):          # continuous-batching iteration
-            outputs[fin.req.rid] = fin.tokens
-        t += 0.01
+    # submit everything up front; each handle streams independently —
+    # the last one asks for a long generation (we cancel it below)
+    handles = [cluster.submit(p, sampling=SamplingParams(max_new_tokens=8))
+               for p in prompts[:-1]]
+    handles.append(cluster.submit(
+        prompts[-1], sampling=SamplingParams(max_new_tokens=64)))
 
-    # --- coupled baseline must produce identical tokens ---
-    base = CoupledEngine(cfg, params, max_slots=8, max_seq=128)
-    for r in reqs_baseline:
-        base.submit(r)
-    expect, t = {}, 0.0
-    while not base.done():
-        for fin in base.step(t):
-            expect[fin.req.rid] = fin.tokens
-        t += 0.01
+    # stream the first request token by token (this lazily pumps the
+    # cluster event loop: prefill chunks, KV transfer, decode batches)
+    print(f"\nstreaming {handles[0].rid}:", end=" ", flush=True)
+    stream = iter(handles[0])
+    for tok in itertools.islice(stream, 3):
+        print(tok, end=" ", flush=True)
 
-    same = sum(outputs[k] == expect[k] for k in outputs)
-    print(f"\nserved {len(outputs)} requests; "
-          f"token-identical to coupled baseline: {same}/{len(outputs)}")
-    for rid in sorted(outputs)[:3]:
-        print(f"  {rid}: {outputs[rid][:10]}")
-    assert same == len(outputs)
+    # cancel another request mid-decode — pages/slots freed immediately
+    cancelled = handles[-1].cancel()
+    for tok in stream:                  # rest of the first request
+        print(tok, end=" ", flush=True)
+    print(f"   (cancelled {handles[-1].rid}: {cancelled})")
+
+    cluster.run()          # drain the rest
+    print("\nresults:")
+    for h in handles:
+        res = h.result()
+        ttft = f"{res.ttft*1e3:6.1f}ms" if res.t_first_token >= 0 else \
+            "   --  "
+        print(f"  {res.rid}  {res.phase.value:9s} tokens={len(res.tokens)}"
+              f"  ttft={ttft}  {res.tokens[:6]}")
+    done = [h for h in handles if h.result().phase.value == "finished"]
+    assert len(done) == len(handles) - 1, "exactly one was cancelled"
+    assert all(len(h.result().tokens) == 8 for h in done)
     print("OK")
 
 

@@ -1,9 +1,10 @@
 """Cluster-scale serving study (the paper's §5 experiment, reproduced).
 
-Runs the five workloads through the event-driven cluster simulator —
-the exact scheduler/dispatcher/allocator objects the real engines use —
-comparing TetriInfer (disaggregated, chunked prefill, two-level
-scheduling, flip) against vanilla vLLM (coupled continuous batching).
+Runs the five workloads through the serving ``Cluster`` on its
+cost-model runtime — the exact scheduler/dispatcher/allocator objects
+and orchestration loop the real engines use — comparing TetriInfer
+(disaggregated, chunked prefill, two-level scheduling, flip) against
+vanilla vLLM (coupled continuous batching).
 
     PYTHONPATH=src python examples/serve_cluster.py [--requests 128]
 """
@@ -12,8 +13,9 @@ import copy
 
 from repro.configs import get_config
 from repro.runtime.costmodel import CostModel, HardwareSpec
-from repro.runtime.simulator import CoupledSimulator, DisaggSimulator
+from repro.runtime.simulator import CoupledSimulator
 from repro.runtime.workload import generate
+from repro.serving import Cluster
 
 
 def main():
@@ -38,10 +40,10 @@ def main():
         reqs = generate(wl, args.requests, seed=args.seed)
         ra = CoupledSimulator(cfg, cost, n_instances=2, prefill_batch=16,
                               max_batch=16).run(copy.deepcopy(reqs))
-        rb = DisaggSimulator(
-            cfg, cost, n_prefill=1, n_decode=1, max_batch=64,
-            network=NetworkStack(spec), enable_flip=True,
-            flip_idle_s=1.0).run(copy.deepcopy(reqs))
+        rb = Cluster(
+            cfg, runtime="sim", cost=cost, n_prefill=1, n_decode=1,
+            max_batch=64, network=NetworkStack(spec), enable_flip=True,
+            flip_idle_s=1.0).serve(copy.deepcopy(reqs))
         ma, mb = ra.metrics, rb.metrics
         print(f"{wl:8s} {ma['avg_ttft']:9.2f}s {mb['avg_ttft']:9.2f}s "
               f"{100*(1-mb['avg_ttft']/ma['avg_ttft']):+5.0f}% "

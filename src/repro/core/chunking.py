@@ -66,6 +66,19 @@ def partition(scheduled: Sequence[Tuple[str, int]],
     return chunks
 
 
+def drop_rid(chunks: Sequence[Chunk], rid: str) -> List[Chunk]:
+    """Remove one request's segments from queued chunks (user cancel);
+    chunks left empty disappear.  A partially-emptied chunk keeps its
+    layout — each segment records its own chunk_start — so the engines
+    can still execute it as-is."""
+    kept: List[Chunk] = []
+    for c in chunks:
+        segs = tuple(s for s in c.segments if s.rid != rid)
+        if segs:
+            kept.append(dataclasses.replace(c, segments=segs))
+    return kept
+
+
 def chunks_for(prompt_len: int, chunk_size: int = DEFAULT_CHUNK_SIZE) -> int:
     return -(-prompt_len // chunk_size)
 

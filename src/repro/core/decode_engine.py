@@ -26,7 +26,7 @@ Execution backends (selected by ``core.backend.backend_for``):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +74,9 @@ class DecodeEngine:
         self.slots: Dict[int, SlotState] = {}
         self._pending: Dict[str, PrefilledKV] = {}
         self.iterations = 0
+        # (rid, token) pairs emitted by the LAST step() — the streaming
+        # feed the serving Cluster forwards to request handles
+        self.stream_events: List[Tuple[str, int]] = []
 
         if self.backend == "paged":
             # the allocator's block tables ARE the physical mapping
@@ -108,13 +111,18 @@ class DecodeEngine:
             self._decode = jax.jit(_decode)
 
     # ------------------------------------------------------------------
-    def receive(self, pk: PrefilledKV) -> None:
-        """Receiver module: prefilled KV has arrived (post transfer wait)."""
+    def receive(self, pk: PrefilledKV,
+                now: Optional[float] = None) -> None:
+        """Receiver module: prefilled KV has arrived (post transfer wait).
+        ``now`` (when the caller tracks time) stamps the transfer-done
+        timestamp that ``summarize`` turns into ``avg_transfer``."""
         # block-table rows are sized for max_seq; the finish condition in
         # step() keeps every admitted sequence inside that bound
         assert pk.req.prompt_len < self.max_seq, \
             f"{pk.req.rid}: prompt {pk.req.prompt_len} >= max_seq"
         pk.req.phase = Phase.DECODE_QUEUED
+        if now is not None:
+            pk.req.t_transfer_done = now
         self._pending[pk.req.rid] = pk
         self.scheduler.enqueue(pk.req)
 
@@ -170,12 +178,26 @@ class DecodeEngine:
             self.pool = self.pool.install(
                 pages, jnp.concatenate(payload_k, axis=1),
                 jnp.concatenate(payload_v, axis=1))
+        # the prefill-emitted first token can itself satisfy the user's
+        # stop criteria (e.g. immediate EOS): finish before any decode
+        # iteration runs, releasing the slot and pages right away
+        admitted_rids = {r.rid for r in admitted}
+        for s in list(self.slots):
+            st = self.slots[s]
+            req = st.req
+            if req.rid in admitted_rids and req.sampling is not None \
+                    and req.sampling.should_stop(1, st.last_token):
+                req.phase = Phase.FINISHED
+                req.t_finish = now
+                self.scheduler.finish(req.rid)
+                del self.slots[s]
         return admitted
 
     def step(self, now: float) -> List[FinishedRequest]:
         """One continuous-batching decode iteration over the slot batch."""
-        if not self.slots:
-            return []
+        self.stream_events = []    # even on the empty early return: a
+        if not self.slots:         # cancel can drain the batch with a
+            return []              # decode_done event still in flight
         self.iterations += 1
         if self.backend == "paged":
             nxt = self._iteration_paged()
@@ -187,14 +209,34 @@ class DecodeEngine:
             req = st.req
             st.last_token = int(nxt[s])
             st.tokens.append(st.last_token)
-            if (req.generated >= req.decode_len
-                    or req.prompt_len + req.generated >= self.max_seq - 1):
+            self.stream_events.append((req.rid, st.last_token))
+            # stop criteria: the user's SamplingParams when attached
+            # (serving API), else the ground-truth decode_len (oracle
+            # mode); the max_seq guard always bounds the block table
+            if req.sampling is not None:
+                stop = req.sampling.should_stop(len(st.tokens),
+                                                st.last_token)
+            else:
+                stop = req.generated >= req.decode_len
+            if stop or req.prompt_len + req.generated >= self.max_seq - 1:
                 req.phase = Phase.FINISHED
                 req.t_finish = now
                 self.scheduler.finish(req.rid)
                 finished.append(FinishedRequest(req=req, tokens=st.tokens))
                 del self.slots[s]
         return finished
+
+    def cancel(self, rid: str) -> bool:
+        """User cancel mid-decode: releases the slot and frees the
+        request's pages (running) or drops it from the queue (pending).
+        Returns whether this engine knew the request."""
+        for s, st in list(self.slots.items()):
+            if st.req.rid == rid:
+                del self.slots[s]
+                return self.scheduler.cancel(rid)
+        known = rid in self._pending
+        self._pending.pop(rid, None)
+        return self.scheduler.cancel(rid) or known
 
     def _iteration_paged(self) -> np.ndarray:
         """Full-slot-batch fused decode against the page pool."""

@@ -180,6 +180,23 @@ class PrefillEngine:
     def idle(self) -> bool:
         return len(self.scheduler) == 0 and not self._chunk_queue
 
+    def cancel(self, rid: str) -> bool:
+        """User cancel before/while prefilling: drop the request from the
+        local scheduler and the chunk queue and free any pages/cache it
+        holds.  Returns whether this engine still owned the request."""
+        if rid not in self._reqs:
+            return False
+        self._reqs.pop(rid)
+        self.scheduler.remove(rid)
+        self._chunk_queue = collections.deque(
+            chunking.drop_rid(self._chunk_queue, rid))
+        if self.backend == "paged":
+            if self.alloc.has(rid):
+                self.alloc.free(rid)
+        else:
+            self._caches.pop(rid, None)
+        return True
+
     # ------------------------------------------------------------------
     def _refill_chunks(self) -> None:
         batch = self.scheduler.next_batch(self.scheduler.sched_batch)

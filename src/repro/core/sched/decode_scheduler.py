@@ -115,6 +115,16 @@ class DecodeScheduler:
         self.alloc.free(rid)
         del self.running[rid]
 
+    def cancel(self, rid: str) -> bool:
+        """User cancel: frees the pages of a running request, or drops a
+        queued one.  Returns whether the request was known here."""
+        if rid in self.running:
+            self.finish(rid)
+            return True
+        n = len(self.queue)
+        self.queue = [r for r in self.queue if r.rid != rid]
+        return len(self.queue) < n
+
     # -- load snapshot for the cluster monitor --------------------------
     def load(self, heavy_thresh: int = 128) -> dict:
         heavy = sum(1 for ri in self.running.values()

@@ -63,6 +63,14 @@ class PrefillScheduler:
         for r in reversed(reqs):
             self.scheduled.appendleft(r)
 
+    def remove(self, rid: str) -> bool:
+        """Drop a queued request (user cancel).  Returns whether it was
+        still queued here (False once it moved on to the chunk queue)."""
+        n = len(self)
+        self.raw = deque(r for r in self.raw if r.rid != rid)
+        self.scheduled = deque(r for r in self.scheduled if r.rid != rid)
+        return len(self) < n
+
     def peek_all(self) -> List[Request]:
         if not self.scheduled:
             self._schedule_window()

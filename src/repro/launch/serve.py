@@ -1,11 +1,60 @@
-"""Serving launcher: run the disaggregated cluster (simulator at paper
-scale, or real engines for small models).
+"""Serving launcher: run the disaggregated cluster (cost-model runtime
+at paper scale, or the real engines on a tiny model) through the
+unified serving API (repro.serving.Cluster — see docs/serving_api.md).
 
   PYTHONPATH=src python -m repro.launch.serve --workload Mixed --requests 128
+  PYTHONPATH=src python -m repro.launch.serve --requests 16 --no-flip
   PYTHONPATH=src python -m repro.launch.serve --real   # tiny model, CPU
 """
 import argparse
 import copy
+
+
+def _print_result(args, r):
+    m = r.metrics
+    print(f"workload={args.workload} n={m['n']}")
+    print(f"avg TTFT {m['avg_ttft']:.3f}s  p90 {m['p90_ttft']:.3f}s")
+    print(f"avg JCT  {m['avg_jct']:.3f}s  p90 {m['p90_jct']:.3f}s")
+    if "avg_transfer" in m:
+        print(f"avg KV transfer {m['avg_transfer']*1e3:.3f}ms")
+    print(f"resource time {r.resource_time:.1f}s "
+          f"(prefill {r.prefill_busy:.1f} decode {r.decode_busy:.1f})  "
+          f"perf/$ {r.perf_per_dollar:.3f} req/inst-s  flips={r.flips} "
+          f"swaps={r.swap_events}")
+
+
+def _run_real(args):
+    """Real JAX engines on a CPU-sized model, same Cluster API."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.runtime.workload import generate
+    from repro.serving import Cluster
+
+    cfg = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                              dtype="float32")
+    print(f"model: {cfg.name}  layers={cfg.n_layers} d={cfg.d_model}")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = generate(args.workload, min(args.requests, 16), seed=0,
+                    max_prompt=48, max_decode=12,
+                    vocab_size=cfg.vocab_size)
+    cluster = Cluster(cfg, runtime="engine", params=params,
+                      n_prefill=args.n_prefill, n_decode=args.n_decode,
+                      prefill_policy=args.prefill_policy,
+                      decode_policy=args.decode_policy,
+                      dispatch_policy=args.dispatch,
+                      chunk_size=16, max_seq=128,
+                      enable_flip=args.flip, flip_idle_s=1.0)
+    handles = [cluster.submit(request=r) for r in reqs]
+    cluster.run()
+    for h in handles[:4]:
+        res = h.result()
+        print(f"  {res.rid}: {len(res.tokens)} tokens "
+              f"{res.tokens[:8]}{'...' if len(res.tokens) > 8 else ''}")
+    _print_result(args, cluster.result())
 
 
 def main():
@@ -22,39 +71,34 @@ def main():
                     choices=["power2", "random", "imbalance"])
     ap.add_argument("--n-prefill", type=int, default=1)
     ap.add_argument("--n-decode", type=int, default=1)
-    ap.add_argument("--flip", action="store_true", default=True)
+    # --flip/--no-flip (the old action="store_true" + default=True could
+    # never actually be disabled from the CLI)
+    ap.add_argument("--flip", action=argparse.BooleanOptionalAction,
+                    default=True, help="enable instance flip (§3.5)")
     ap.add_argument("--real", action="store_true",
                     help="run the real engines on a tiny model (CPU)")
     args = ap.parse_args()
 
     if args.real:
-        from examples import quickstart  # noqa — same flow
-        import runpy
-        runpy.run_path("examples/quickstart.py", run_name="__main__")
+        _run_real(args)
         return
 
     from repro.configs import get_config
     from repro.runtime.costmodel import CostModel, HardwareSpec
-    from repro.runtime.simulator import DisaggSimulator
     from repro.runtime.workload import generate
+    from repro.serving import Cluster
 
     cfg = get_config(args.arch)
     cost = CostModel(cfg, HardwareSpec.v100_tp2())
     reqs = generate(args.workload, args.requests, seed=0)
-    r = DisaggSimulator(
-        cfg, cost, n_prefill=args.n_prefill, n_decode=args.n_decode,
+    r = Cluster(
+        cfg, runtime="sim", cost=cost,
+        n_prefill=args.n_prefill, n_decode=args.n_decode,
         prefill_policy=args.prefill_policy,
         decode_policy=args.decode_policy, dispatch_policy=args.dispatch,
         max_batch=64, enable_flip=args.flip, flip_idle_s=1.0,
-    ).run(copy.deepcopy(reqs))
-    m = r.metrics
-    print(f"workload={args.workload} n={m['n']}")
-    print(f"avg TTFT {m['avg_ttft']:.3f}s  p90 {m['p90_ttft']:.3f}s")
-    print(f"avg JCT  {m['avg_jct']:.3f}s  p90 {m['p90_jct']:.3f}s")
-    print(f"resource time {r.resource_time:.1f}s "
-          f"(prefill {r.prefill_busy:.1f} decode {r.decode_busy:.1f})  "
-          f"perf/$ {r.perf_per_dollar:.3f} req/inst-s  flips={r.flips} "
-          f"swaps={r.swap_events}")
+    ).serve(copy.deepcopy(reqs))
+    _print_result(args, r)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,17 @@
-"""Inference request model + lifecycle timestamps (TTFT/JCT accounting)."""
+"""Inference request model + lifecycle timestamps (TTFT/JCT accounting).
+
+Also home of ``SamplingParams`` — the user-facing stop criteria the
+serving API (``repro.serving``) attaches to a request.  Engines consult
+``Request.sampling`` when present; when absent they fall back to the
+ground-truth ``decode_len`` (oracle mode: simulator parity tests and the
+paper-figure benchmarks, where the generated length is an experiment
+input rather than a model decision).
+"""
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -15,6 +23,44 @@ class Phase(enum.Enum):
     DECODE_QUEUED = "decode_queued"
     DECODE = "decode"
     FINISHED = "finished"
+    CANCELLED = "cancelled"      # user cancel — pages/slots already freed
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """User-facing stop criteria (the serving API's replacement for the
+    engines' reliance on ground-truth ``decode_len``).
+
+    ``max_new_tokens`` caps ALL generated tokens, including the first
+    token emitted by prefill (so a finished request's token list has at
+    most ``max_new_tokens`` entries).  ``stop_token_ids`` ends generation
+    when the model emits any of them (the stop token is kept in the
+    output, vLLM-style); ``ignore_eos`` disables that check while the cap
+    still applies — the standard benchmarking knob.
+    """
+    max_new_tokens: Optional[int] = None
+    stop_token_ids: Tuple[int, ...] = ()
+    ignore_eos: bool = False
+
+    def __post_init__(self):
+        if self.max_new_tokens is not None and self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        # normalize lists/sets passed by callers
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(self.stop_token_ids))
+
+    def should_stop(self, n_new_tokens: int, last_token: Optional[int]
+                    ) -> bool:
+        """``n_new_tokens`` counts every generated token so far including
+        prefill's first token; ``last_token`` is the newest one (None on
+        the cost-model runtime, which generates lengths, not tokens)."""
+        if (self.max_new_tokens is not None
+                and n_new_tokens >= self.max_new_tokens):
+            return True
+        if (not self.ignore_eos and last_token is not None
+                and last_token in self.stop_token_ids):
+            return True
+        return False
 
 
 @dataclasses.dataclass
@@ -30,6 +76,8 @@ class Request:
     # request (the engines substitute zeros, which makes cross-attention
     # output exactly zero on both backends)
     enc_embeds: Optional[np.ndarray] = None
+    # user stop criteria (serving API); None = oracle mode (decode_len)
+    sampling: Optional[SamplingParams] = None
     # --- scheduling state ---
     phase: Phase = Phase.WAITING
     predicted_bucket: int = -1           # length-range bucket (§3.3.2)
@@ -70,7 +118,7 @@ def summarize(reqs: List[Request]) -> dict:
         return {"n": 0}
     ttfts = np.array([r.ttft for r in done])
     jcts = np.array([r.jct for r in done])
-    return {
+    out = {
         "n": len(done),
         "avg_ttft": float(ttfts.mean()),
         "p90_ttft": float(np.percentile(ttfts, 90)),
@@ -79,3 +127,10 @@ def summarize(reqs: List[Request]) -> dict:
         "makespan": float(max(r.t_finish for r in done)
                           - min(r.arrival for r in done)),
     }
+    # prefill->decode KV transfer wait (t_transfer_done is stamped on the
+    # kv_arrive event / DecodeEngine.receive; absent for coupled runs)
+    xfers = [r.t_transfer_done - r.t_first_token for r in done
+             if r.t_transfer_done >= 0 and r.t_first_token >= 0]
+    if xfers:
+        out["avg_transfer"] = float(np.mean(xfers))
+    return out

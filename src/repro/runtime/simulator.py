@@ -1,100 +1,38 @@
-"""Event-driven cluster simulator (paper-scale experiments, §5).
+"""Cluster simulator entry points (paper-scale experiments, §5).
 
-Uses the *real* scheduler/dispatcher/allocator objects from core/ with
-the analytic cost model instead of executing the LLM, so cluster-scale
-workloads (OPT-13B, 128+ requests, 2-8 instances) run in milliseconds on
-CPU while preserving every scheduling decision the real engines make.
+The TetriInfer orchestration itself lives in ``repro.serving.Cluster``
+(one event loop for both the cost-model runtime and the real engines);
+``DisaggSimulator`` is kept as a thin compatibility shim over
+``Cluster(runtime="sim")`` — metric-identical to the pre-refactor
+simulator on fixed seeds (pinned by tests/golden_sim_metrics.json).
 
-Two system models:
-  * ``DisaggSimulator``  — TetriInfer: prefill instances (chunked prefill,
-    SJF/FCFS/LJF, predictor, power-of-two dispatch) + decode instances
-    (greedy/reserve-*), KV transfer delays, instance flip.
-  * ``CoupledSimulator`` — vanilla-vLLM baseline: prefill and decode
-    coupled in each instance; prefill iterations preempt decode
-    (the §2.2.2 interference, structurally).
+``CoupledSimulator`` — the vanilla-vLLM baseline where prefill and
+decode share each instance and prefill iterations preempt decode (the
+§2.2.2 interference, structurally) — remains a standalone loop: it is
+the comparison *baseline*, not a disaggregated orchestration.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import itertools
-from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Dict, List, Optional
 
-from repro.core import chunking
-from repro.core.kv_transfer import NetworkStack, TS_NVLINK
+from repro.core.kv_transfer import NetworkStack
 from repro.core.predictor import OraclePredictor
-from repro.core.sched.decode_scheduler import DecodeScheduler
-from repro.core.sched.dispatcher import Dispatcher
-from repro.core.sched.flip import FlipMachine, FlipState, Role
-from repro.core.sched.global_scheduler import ClusterMonitor, GlobalScheduler
-from repro.core.sched.prefill_scheduler import PrefillScheduler
 from repro.kvcache.paged import OutOfPages, PagedAllocator
 from repro.runtime.costmodel import CostModel
 from repro.runtime.request import Phase, Request, summarize
+from repro.serving.cluster import Cluster, SimResult
+from repro.serving.sim_instance import SWAP_BW
 
-SWAP_BW = 4e9   # effective PCIe swap bandwidth (serialized, paper-era V100 hosts)
-
-
-@dataclasses.dataclass
-class SimResult:
-    metrics: dict
-    resource_time: float
-    prefill_busy: float
-    decode_busy: float
-    swap_events: int
-    flips: int
-    requests: List[Request]
-
-    @property
-    def perf_per_dollar(self) -> float:
-        """Requests completed per instance-busy-second (§5.1 perf/$)."""
-        n = self.metrics.get("n", 0)
-        return n / self.resource_time if self.resource_time else 0.0
-
-
-class _Instance:
-    """One engine that can serve either role; flip just switches the flag
-    (paper §3.5) — both facets' state lives in the same object."""
-
-    def __init__(self, iid, role, *, sched_policy, sched_batch, chunk_size,
-                 decode_policy, n_pages, page_size, max_batch):
-        self.iid = iid
-        self.flip = FlipMachine(role)
-        # prefill facet
-        self.psched = PrefillScheduler(sched_policy, sched_batch)
-        self.chunks: Deque[chunking.Chunk] = deque()
-        self.reqs: Dict[str, Request] = {}
-        # decode facet
-        self.alloc = PagedAllocator(n_pages, page_size)
-        self.dsched = DecodeScheduler(self.alloc, decode_policy, max_batch)
-        self.busy = 0.0
-        self.running = False
-        self.swaps = 0
-
-    @property
-    def role(self):
-        return self.flip.role
-
-    def refill(self, chunk_size):
-        batch = self.psched.next_batch(self.psched.sched_batch)
-        if batch:
-            pairs = [(r.rid, r.prompt_len) for r in batch]
-            self.chunks.extend(chunking.partition(pairs, chunk_size))
-            for r in batch:
-                self.reqs[r.rid] = r
-
-    def prefill_idle(self):
-        return len(self.psched) == 0 and not self.chunks
-
-    def decode_idle(self):
-        return not self.dsched.running and not self.dsched.queue
-
-    def idle(self):
-        return self.prefill_idle() and self.decode_idle()
+__all__ = ["DisaggSimulator", "CoupledSimulator", "SimResult", "SWAP_BW"]
 
 
 class DisaggSimulator:
+    """Compat shim: the old simulator constructor/result surface, now
+    delegating to the unified serving ``Cluster`` (see
+    docs/serving_api.md).  New code should use ``repro.serving.Cluster``
+    directly — this shim exists so the pre-refactor experiment scripts
+    and their fixed-seed outputs stay valid."""
+
     def __init__(self, cfg, cost: CostModel, *, n_prefill=1, n_decode=1,
                  prefill_policy="sjf", sched_batch=16, chunk_size=512,
                  decode_policy="reserve-dynamic", dispatch_policy="power2",
@@ -103,254 +41,25 @@ class DisaggSimulator:
                  n_pages=4096, page_size=16, max_batch=64,
                  enable_flip=False, flip_idle_s=60.0,
                  co_run_predictor=True):
-        self.cfg = cfg
-        self.cost = cost
-        self.chunk_size = chunk_size
-        self.predictor = predictor or OraclePredictor()
-        self.network = network or NetworkStack(TS_NVLINK)
-        self.dispatcher = Dispatcher(dispatch_policy, page_size)
-        self.monitor = ClusterMonitor(flip_idle_s=flip_idle_s)
-        self.gsched = GlobalScheduler()
-        self.enable_flip = enable_flip
-        self.co_run = co_run_predictor
-        self.page_size = page_size
+        self.cluster = Cluster(
+            cfg, runtime="sim", cost=cost,
+            n_prefill=n_prefill, n_decode=n_decode,
+            prefill_policy=prefill_policy, sched_batch=sched_batch,
+            chunk_size=chunk_size, decode_policy=decode_policy,
+            dispatch_policy=dispatch_policy,
+            # the old simulator defaulted a missing predictor to the
+            # oracle — preserve that here
+            predictor=predictor or OraclePredictor(),
+            network=network, n_pages=n_pages, page_size=page_size,
+            max_batch=max_batch, enable_flip=enable_flip,
+            flip_idle_s=flip_idle_s, co_run_predictor=co_run_predictor)
 
-        def mk(i, role):
-            return _Instance(
-                f"i{i}", role, sched_policy=prefill_policy,
-                sched_batch=sched_batch, chunk_size=chunk_size,
-                decode_policy=decode_policy, n_pages=n_pages,
-                page_size=page_size, max_batch=max_batch)
-        self.instances = [mk(i, Role.PREFILL) for i in range(n_prefill)] \
-            + [mk(n_prefill + i, Role.DECODE) for i in range(n_decode)]
-        self._events: list = []
-        self._seq = itertools.count()
-        self._pending_arrivals: List[Request] = []
+    @property
+    def instances(self):
+        return self.cluster.instances
 
-    # -- role views --------------------------------------------------------
-    def _prefills(self, accepting=True):
-        return [i for i in self.instances if i.role == Role.PREFILL
-                and (i.flip.accepting or not accepting)]
-
-    def _decodes(self, accepting=True):
-        return [i for i in self.instances if i.role == Role.DECODE
-                and (i.flip.accepting or not accepting)]
-
-    def _inst(self, iid):
-        return next(i for i in self.instances if i.iid == iid)
-
-    # -- event helpers ---------------------------------------------------
-    def _push(self, t, kind, payload=None):
-        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
-
-    def _decode_loads(self):
-        for d in self._decodes():
-            self.monitor.report_decode(d.iid, d.dsched.load(), self._now)
-        # drop stale entries for flipped instances
-        for iid in list(self.monitor.decode_loads):
-            if self._inst(iid).role != Role.DECODE:
-                del self.monitor.decode_loads[iid]
-        return self.monitor.broadcast()
-
-    # -- prefill side ------------------------------------------------------
-    def _kick_prefill(self, p: _Instance):
-        if p.running or p.role != Role.PREFILL:
-            return
-        if not p.chunks:
-            p.refill(self.chunk_size)
-        if not p.chunks:
-            return
-        p.running = True
-        dur = self.cost.prefill_time(self.chunk_size) \
-            * self.cost.predictor_overhead(self.co_run)
-        for seg in p.chunks[0].segments:
-            r = p.reqs[seg.rid]
-            if r.t_prefill_start < 0:
-                r.t_prefill_start = self._now
-                r.phase = Phase.PREFILL
-        self._push(self._now + dur, "prefill_done", p.iid)
-
-    def _on_prefill_done(self, p: _Instance):
-        chunk = p.chunks.popleft()
-        dur = self.cost.prefill_time(self.chunk_size) \
-            * self.cost.predictor_overhead(self.co_run)
-        p.busy += dur
-        loads = self._decode_loads()
-        for seg in chunk.segments:
-            req = p.reqs[seg.rid]
-            req.prefilled = seg.req_start + seg.length
-            if req.prefilled >= req.prompt_len:
-                req.t_first_token = self._now
-                b, lo, hi = self.predictor.predict_range(
-                    req.prompt_tokens, req.decode_len)
-                req.predicted_bucket, req.predicted_lo, req.predicted_hi = \
-                    b, lo, hi
-                did = self.dispatcher.select(
-                    loads, req.prompt_len, req.predicted_hi,
-                    heavy=req.is_heavy_decode())
-                if did is None or self._inst(did).role != Role.DECODE:
-                    cands = self._decodes() or self._decodes(accepting=False)
-                    did = cands[0].iid if cands else None
-                if did is None:
-                    # no decode instance at all: stash; monitor will flip
-                    self._pending_arrivals.append(req)
-                    continue
-                self.gsched.note_dispatch(req.rid, did)
-                n_chunks = chunking.chunks_for(req.prompt_len,
-                                               self.chunk_size)
-                delay = self.network.send_kv(self.cfg, req.prompt_len,
-                                             n_chunks=n_chunks,
-                                             enc_len=self.cfg.cross_ctx)
-                req.phase = Phase.TRANSFER
-                p.reqs.pop(req.rid)
-                self._push(self._now + delay, "kv_arrive", (req, did))
-        p.running = False
-        self._kick_prefill(p)
-
-    # -- decode side -------------------------------------------------------
-    def _kick_decode(self, d: _Instance):
-        if d.running or d.role != Role.DECODE:
-            return
-        admitted = d.dsched.admit()
-        swap_in = 0.0
-        for r in admitted:
-            if r.swapped:        # pay to bring the KV back (PCIe-class)
-                kvb = self.cfg.kv_bytes_per_token() \
-                    * (r.prompt_len + r.generated)
-                swap_in += kvb / SWAP_BW
-                r.swapped = False
-        d.busy += swap_in
-        for rid in d.dsched.running:
-            r = d.dsched.running[rid].req
-            if r.t_decode_start < 0:
-                r.t_decode_start = self._now
-                r.phase = Phase.DECODE
-        if not d.dsched.running:
-            return
-        batch = len(d.dsched.running)
-        ctx = sum(ri.req.prompt_len + ri.req.generated
-                  for ri in d.dsched.running.values())
-        d.running = True
-        dur = self.cost.decode_time(batch, ctx) + swap_in
-        self._push(self._now + dur, "decode_done", d.iid)
-
-    def _on_decode_done(self, d: _Instance):
-        batch = len(d.dsched.running)
-        ctx = sum(ri.req.prompt_len + ri.req.generated
-                  for ri in d.dsched.running.values())
-        iter_time = self.cost.decode_time(batch, ctx)
-        for rid in list(d.dsched.running):
-            req = d.dsched.running[rid].req
-            try:
-                d.dsched.step_token(rid)
-            except OutOfPages:
-                # greedy-policy thrash: evict (swap out), pay the penalty,
-                # requeue
-                d.swaps += 1
-                d.alloc.swap_events += 1
-                kvb = self.cfg.kv_bytes_per_token() \
-                    * (req.prompt_len + req.generated)
-                d.busy += kvb / SWAP_BW
-                d.dsched.finish(rid)          # frees pages
-                req.phase = Phase.DECODE_QUEUED
-                req.swapped = True
-                d.dsched.enqueue(req)
-                continue
-            if req.generated >= req.decode_len:
-                req.phase = Phase.FINISHED
-                req.t_finish = self._now
-                d.dsched.finish(rid)
-        d.busy += iter_time
-        d.running = False
-        self._kick_decode(d)
-
-    # -- flips --------------------------------------------------------------
-    def _maybe_flip(self):
-        # complete in-flight flips; drain watchers
-        for inst in self.instances:
-            if inst.flip.state == FlipState.DRAINING:
-                if (inst.role == Role.PREFILL and inst.prefill_idle()
-                        and not inst.running) or \
-                   (inst.role == Role.DECODE and inst.decode_idle()
-                        and not inst.running):
-                    inst.flip.drained(self._now)
-            if inst.flip.maybe_complete(self._now):
-                # newly active in the flipped role
-                if inst.role == Role.PREFILL:
-                    self._kick_prefill(inst)
-                else:
-                    self._kick_decode(inst)
-        if not self.enable_flip:
-            return
-        decode_backlog = sum(len(d.dsched.queue) for d in self._decodes())
-        prefill_backlog = sum(len(p.psched) + len(p.chunks)
-                              for p in self._prefills())
-        for iid in self.monitor.flip_candidates(self._now):
-            inst = self._inst(iid)
-            if not inst.flip.accepting or not inst.idle() or inst.running:
-                continue
-            if inst.role == Role.PREFILL and decode_backlog > 0:
-                inst.flip.begin_flip()
-            elif inst.role == Role.DECODE and prefill_backlog > 0 \
-                    and len(self._decodes()) > 1:
-                inst.flip.begin_flip()
-
-    def _route_pending(self):
-        loads = {p.iid: p.psched.queued_tokens for p in self._prefills()}
-        if not loads:
-            return
-        for req in self._pending_arrivals:
-            iid = self.gsched.route(req, loads)
-            p = self._inst(iid)
-            p.psched.add(req)
-            loads[iid] = p.psched.queued_tokens
-            self._kick_prefill(p)
-        self._pending_arrivals = []
-
-    # -- main loop -----------------------------------------------------------
     def run(self, requests: List[Request]) -> SimResult:
-        self._now = 0.0
-        for r in requests:
-            self._push(r.arrival, "arrival", r)
-        self._push(self.monitor.interval_s, "monitor")
-        while self._events:
-            t, _, kind, payload = heapq.heappop(self._events)
-            self._now = t
-            if kind == "arrival":
-                self._pending_arrivals.append(payload)
-                self._route_pending()
-            elif kind == "prefill_done":
-                self._on_prefill_done(self._inst(payload))
-            elif kind == "kv_arrive":
-                req, did = payload
-                d = self._inst(did)
-                req.phase = Phase.DECODE_QUEUED
-                d.dsched.enqueue(req)
-                self._kick_decode(d)
-            elif kind == "decode_done":
-                self._on_decode_done(self._inst(payload))
-            elif kind == "monitor":
-                self._decode_loads()
-                for p in self._prefills():
-                    self.monitor.report_prefill(
-                        p.iid, p.psched.queued_tokens, self._now)
-                self._maybe_flip()
-                self._route_pending()
-                busy_any = any(not i.idle() or i.running
-                               for i in self.instances)
-                if self._events or busy_any or self._pending_arrivals:
-                    self._push(self._now + self.monitor.interval_s,
-                               "monitor")
-        pf = sum(i.busy for i in self.instances
-                 if i.flip.role == Role.PREFILL)
-        db = sum(i.busy for i in self.instances
-                 if i.flip.role == Role.DECODE)
-        return SimResult(
-            metrics=summarize(requests), resource_time=pf + db,
-            prefill_busy=pf, decode_busy=db,
-            swap_events=sum(i.swaps for i in self.instances),
-            flips=sum(i.flip.flips for i in self.instances),
-            requests=requests)
+        return self.cluster.serve(requests)
 
 
 class CoupledSimulator:

@@ -1,0 +1,18 @@
+"""Unified cluster serving API (see docs/serving_api.md).
+
+One orchestration core (``Cluster``) drives N instances through the
+``InstanceRuntime`` protocol — cost-model timing (``runtime="sim"``) or
+the real JAX engines (``runtime="engine"``) — with a streaming request
+API on top: ``submit()`` → ``RequestHandle`` → iterate / ``cancel()`` /
+``result()``, stop criteria via ``SamplingParams``.
+"""
+from repro.runtime.request import SamplingParams
+from repro.serving.cluster import (Cluster, RequestHandle, RequestResult,
+                                   SimResult)
+from repro.serving.runtime import (InstanceRuntime, PrefillOutcome,
+                                   StepEvents)
+
+__all__ = [
+    "Cluster", "RequestHandle", "RequestResult", "SimResult",
+    "SamplingParams", "InstanceRuntime", "PrefillOutcome", "StepEvents",
+]

@@ -1,0 +1,551 @@
+"""Execution-agnostic cluster orchestration (the TetriInfer control
+plane, extracted from the old ``DisaggSimulator``).
+
+One ``Cluster`` owns the event loop, the ``GlobalScheduler`` (arrival
+routing), the ``Dispatcher`` (prefill→decode placement by predicted
+length), the ``ClusterMonitor`` (load broadcast + flip watcher), the
+per-instance ``FlipMachine``s and the KV-transfer events — and drives N
+instances through the narrow ``InstanceRuntime`` protocol:
+
+  * ``runtime="sim"``    — ``SimInstance``: analytic cost-model timing;
+    cluster-scale workloads (OPT-13B, 128+ requests) in milliseconds.
+    Metric-identical to the pre-refactor ``DisaggSimulator`` on fixed
+    seeds (pinned by tests/golden_sim_metrics.json).
+  * ``runtime="engine"`` — ``EngineInstance``: the real JAX engines on
+    a device page pool; multi-instance serving of actual models,
+    token-identical to the coupled baseline.
+
+On top sits the user-facing request API: ``submit()`` returns a
+``RequestHandle`` whose iterator streams tokens as they are generated
+(lazily pumping the event loop), with ``cancel()`` freeing pages/slots
+mid-flight and ``result()`` carrying per-phase timestamps.  Stop
+criteria come from ``SamplingParams`` instead of the oracle
+``decode_len``.
+
+Event kinds (a heap of ``(t, seq, kind, payload)``):
+
+  arrival       a submitted request reaches the global scheduler
+  prefill_done  one prefill chunk completes on an instance
+  kv_arrive     a prefilled KV lands on its decode instance (post
+                emulated transfer wait; stamps ``t_transfer_done``)
+  decode_done   one decode iteration completes on an instance
+  monitor       periodic load broadcast / flip decisions / routing
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.kv_transfer import NetworkStack, TS_NVLINK
+from repro.core.predictor import OraclePredictor
+from repro.core.sched.dispatcher import Dispatcher
+from repro.core.sched.flip import FlipState, Role
+from repro.core.sched.global_scheduler import ClusterMonitor, GlobalScheduler
+from repro.runtime.request import Phase, Request, SamplingParams, summarize
+from repro.serving.runtime import InstanceRuntime, PrefillOutcome
+
+_UNSET = object()
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Cluster run summary (the old simulator's result type)."""
+    metrics: dict
+    resource_time: float
+    prefill_busy: float
+    decode_busy: float
+    swap_events: int
+    flips: int
+    requests: List[Request]
+
+    @property
+    def perf_per_dollar(self) -> float:
+        """Requests completed per instance-busy-second (§5.1 perf/$)."""
+        n = self.metrics.get("n", 0)
+        return n / self.resource_time if self.resource_time else 0.0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Terminal state of one request, with per-phase timestamps."""
+    rid: str
+    phase: Phase
+    tokens: List[int]
+    arrival: float
+    t_prefill_start: float
+    t_first_token: float
+    t_transfer_done: float
+    t_decode_start: float
+    t_finish: float
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.arrival
+
+    @property
+    def jct(self) -> float:
+        return self.t_finish - self.arrival
+
+
+class RequestHandle:
+    """Streaming view of one submitted request.
+
+    Iterating yields generated tokens in order as the cluster produces
+    them, pumping the event loop on demand — ``for tok in handle`` is
+    the streaming API.  On the sim runtime tokens are ``-1``
+    placeholders (the cost model generates lengths, not ids); counts
+    and timing are real.
+    """
+
+    def __init__(self, cluster: "Cluster", req: Request):
+        self._cluster = cluster
+        self._req = req
+        self._cursor = 0
+
+    @property
+    def rid(self) -> str:
+        return self._req.rid
+
+    @property
+    def request(self) -> Request:
+        return self._req
+
+    def done(self) -> bool:
+        return self._req.phase in (Phase.FINISHED, Phase.CANCELLED)
+
+    def tokens_so_far(self) -> List[int]:
+        return list(self._cluster._buffers[self.rid])
+
+    def __iter__(self):
+        buf = self._cluster._buffers[self.rid]
+        while True:
+            while self._cursor < len(buf):
+                tok = buf[self._cursor]
+                self._cursor += 1
+                yield tok
+            if self.done() or not self._cluster._pump():
+                return
+
+    def cancel(self) -> bool:
+        """Abort the request wherever it is; frees its pages/slots."""
+        return self._cluster.cancel(self.rid)
+
+    def result(self, wait: bool = True) -> RequestResult:
+        """Terminal result; ``wait`` pumps the event loop to completion
+        for this request first."""
+        while wait and not self.done() and self._cluster._pump():
+            pass
+        r = self._req
+        return RequestResult(
+            rid=r.rid, phase=r.phase,
+            tokens=self.tokens_so_far(), arrival=r.arrival,
+            t_prefill_start=r.t_prefill_start,
+            t_first_token=r.t_first_token,
+            t_transfer_done=r.t_transfer_done,
+            t_decode_start=r.t_decode_start, t_finish=r.t_finish)
+
+
+class Cluster:
+    """N prefill/decode instances under one orchestration core."""
+
+    def __init__(self, cfg, *, runtime: str = "sim",
+                 cost=None, params=None,
+                 n_prefill: int = 1, n_decode: int = 1,
+                 prefill_policy: str = "sjf", sched_batch: int = 16,
+                 chunk_size: Optional[int] = None,
+                 decode_policy: str = "reserve-dynamic",
+                 dispatch_policy: str = "power2",
+                 predictor=_UNSET,
+                 network: Optional[NetworkStack] = None,
+                 n_pages: Optional[int] = None, page_size: int = 16,
+                 max_batch: Optional[int] = None,
+                 enable_flip: bool = False, flip_idle_s: float = 60.0,
+                 co_run_predictor: bool = True,
+                 max_seq: int = 128, backend: str = "auto",
+                 step_dt: float = 0.01):
+        assert runtime in ("sim", "engine"), runtime
+        self.cfg = cfg
+        self.runtime = runtime
+        self.predictor = (OraclePredictor() if predictor is _UNSET
+                          else predictor)
+        self.network = network or NetworkStack(TS_NVLINK)
+        self.dispatcher = Dispatcher(dispatch_policy, page_size)
+        self.monitor = ClusterMonitor(flip_idle_s=flip_idle_s)
+        self.gsched = GlobalScheduler()
+        self.enable_flip = enable_flip
+        self.page_size = page_size
+        self.max_seq = max_seq
+
+        if runtime == "sim":
+            assert cost is not None, "sim runtime needs a CostModel"
+            from repro.serving.sim_instance import SimInstance
+            chunk_size = 512 if chunk_size is None else chunk_size
+            n_pages = 4096 if n_pages is None else n_pages
+            max_batch = 64 if max_batch is None else max_batch
+            self.chunk_size = chunk_size
+
+            def mk(i, role):
+                return SimInstance(
+                    f"i{i}", role, cfg=cfg, cost=cost,
+                    sched_policy=prefill_policy, sched_batch=sched_batch,
+                    chunk_size=chunk_size, decode_policy=decode_policy,
+                    n_pages=n_pages, page_size=page_size,
+                    max_batch=max_batch,
+                    co_run_predictor=co_run_predictor)
+        else:
+            assert params is not None, "engine runtime needs model params"
+            from repro.serving.engine_instance import EngineInstance
+            chunk_size = 16 if chunk_size is None else chunk_size
+            n_pages = 256 if n_pages is None else n_pages
+            max_batch = 8 if max_batch is None else max_batch
+            self.chunk_size = chunk_size
+
+            def mk(i, role):
+                return EngineInstance(
+                    f"i{i}", role, cfg=cfg, params=params,
+                    network=self.network,
+                    prefill_policy=prefill_policy,
+                    sched_batch=sched_batch, chunk_size=chunk_size,
+                    decode_policy=decode_policy, max_slots=max_batch,
+                    n_pages=n_pages, page_size=page_size,
+                    max_seq=max_seq, backend=backend, step_dt=step_dt)
+
+        self.instances: List[InstanceRuntime] = \
+            [mk(i, Role.PREFILL) for i in range(n_prefill)] \
+            + [mk(n_prefill + i, Role.DECODE) for i in range(n_decode)]
+        self._now = 0.0
+        self._events: list = []
+        self._seq = itertools.count()
+        self._rid_seq = itertools.count()
+        self._monitor_armed = False
+        self._stall_ticks = 0
+        self._pending_arrivals: List[Request] = []
+        # fully-prefilled requests stashed while NO decode instance
+        # existed — routed to a decode queue once a flip creates one
+        # (the old simulator re-enqueued these into a PREFILL scheduler,
+        # double-prefilling them and corrupting TTFT/busy accounting)
+        self._pending_decode: List[PrefillOutcome] = []
+        self._buffers: Dict[str, List[int]] = {}
+        self._reqs: Dict[str, Request] = {}
+        self._cancelled: set = set()
+
+    # -- role views ---------------------------------------------------------
+    def _prefills(self, accepting=True):
+        return [i for i in self.instances if i.flip.role == Role.PREFILL
+                and (i.flip.accepting or not accepting)]
+
+    def _decodes(self, accepting=True):
+        return [i for i in self.instances if i.flip.role == Role.DECODE
+                and (i.flip.accepting or not accepting)]
+
+    def _inst(self, iid) -> InstanceRuntime:
+        return next(i for i in self.instances if i.iid == iid)
+
+    # -- event helpers ------------------------------------------------------
+    def _push(self, t, kind, payload=None):
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def _arm_monitor(self):
+        if not self._monitor_armed:
+            self._monitor_armed = True
+            self._push(self._now + self.monitor.interval_s, "monitor")
+
+    def _decode_loads(self):
+        for d in self._decodes():
+            self.monitor.report_decode(d.iid, d.decode_load(), self._now)
+        # drop stale entries for flipped instances
+        for iid in list(self.monitor.decode_loads):
+            if self._inst(iid).flip.role != Role.DECODE:
+                del self.monitor.decode_loads[iid]
+        return self.monitor.broadcast()
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, prompt_tokens=None, *, sampling: Optional[
+               SamplingParams] = None, rid: Optional[str] = None,
+               arrival: Optional[float] = None,
+               decode_len: Optional[int] = None,
+               enc_embeds=None, request: Optional[Request] = None
+               ) -> RequestHandle:
+        """Submit one request; returns a streaming handle.
+
+        Either pass ``prompt_tokens`` (+ ``sampling`` stop criteria),
+        or a pre-built ``Request`` (oracle mode — the paper-experiment
+        path, where ``decode_len`` is ground truth).
+        """
+        if request is None:
+            assert prompt_tokens is not None, \
+                "submit() needs prompt_tokens or a Request"
+            prompt_tokens = np.asarray(prompt_tokens, dtype=np.int32)
+            plen = len(prompt_tokens)
+            if decode_len is None:
+                cap = (sampling.max_new_tokens
+                       if sampling and sampling.max_new_tokens else None)
+                decode_len = cap or max(1, self.max_seq - plen - 2)
+            request = Request(
+                rid=rid or f"req{next(self._rid_seq):05d}",
+                prompt_len=plen, decode_len=decode_len,
+                arrival=self._now if arrival is None else arrival,
+                prompt_tokens=prompt_tokens, enc_embeds=enc_embeds)
+        if sampling is not None:
+            request.sampling = sampling
+        return self._submit_request(request)
+
+    def _submit_request(self, req: Request) -> RequestHandle:
+        assert req.rid not in self._reqs, f"duplicate rid {req.rid}"
+        self._reqs[req.rid] = req
+        self._buffers[req.rid] = []
+        self._push(max(req.arrival, self._now), "arrival", req)
+        self._arm_monitor()
+        return RequestHandle(self, req)
+
+    def cancel(self, rid: str) -> bool:
+        """Abort a request wherever it is; its pages/slots are freed on
+        whichever instance holds it, and any in-flight KV payload is
+        dropped on arrival."""
+        req = self._reqs.get(rid)
+        if req is None or req.phase in (Phase.FINISHED, Phase.CANCELLED):
+            return False
+        self._cancelled.add(rid)
+        self._pending_arrivals = [r for r in self._pending_arrivals
+                                  if r.rid != rid]
+        self._pending_decode = [oc for oc in self._pending_decode
+                                if oc.req.rid != rid]
+        for inst in self.instances:
+            inst.cancel(rid)
+        req.phase = Phase.CANCELLED
+        req.t_finish = self._now
+        return True
+
+    def run(self) -> None:
+        """Drain the event loop (all submitted requests to terminal)."""
+        while self._pump():
+            pass
+
+    def serve(self, requests: List[Request]) -> SimResult:
+        """Batch API (and the ``DisaggSimulator`` compat path): submit
+        pre-built requests, run to completion, summarize."""
+        for r in requests:
+            self._reqs[r.rid] = r
+            self._buffers[r.rid] = []
+            self._push(r.arrival, "arrival", r)
+        self._arm_monitor()
+        self.run()
+        return self.result(requests)
+
+    def result(self, requests: Optional[List[Request]] = None) -> SimResult:
+        reqs = requests if requests is not None \
+            else list(self._reqs.values())
+        pf = sum(i.busy for i in self.instances
+                 if i.flip.role == Role.PREFILL)
+        db = sum(i.busy for i in self.instances
+                 if i.flip.role == Role.DECODE)
+        return SimResult(
+            metrics=summarize(reqs), resource_time=pf + db,
+            prefill_busy=pf, decode_busy=db,
+            swap_events=sum(i.swaps for i in self.instances),
+            flips=sum(i.flip.flips for i in self.instances),
+            requests=reqs)
+
+    # -- event loop ---------------------------------------------------------
+    def _pump(self) -> bool:
+        """Process ONE event; returns False when the loop is drained."""
+        if not self._events:
+            return False
+        t, _, kind, payload = heapq.heappop(self._events)
+        self._now = t
+        if kind == "arrival":
+            if payload.rid not in self._cancelled:
+                self._pending_arrivals.append(payload)
+                self._route_pending()
+        elif kind == "prefill_done":
+            self._on_prefill_done(self._inst(payload))
+        elif kind == "kv_arrive":
+            self._on_kv_arrive(*payload)
+        elif kind == "decode_done":
+            self._on_decode_done(self._inst(payload))
+        elif kind == "monitor":
+            self._on_monitor()
+        return True
+
+    # -- prefill side -------------------------------------------------------
+    def _kick_prefill(self, p: InstanceRuntime):
+        if p.running or p.flip.role != Role.PREFILL:
+            return
+        dur = p.prefill_start(self._now)
+        if dur is None:
+            return
+        p.running = True
+        self._push(self._now + dur, "prefill_done", p.iid)
+
+    def _predict(self, req: Request) -> None:
+        if self.predictor is not None and req.predicted_bucket < 0:
+            b, lo, hi = self.predictor.predict_range(
+                req.prompt_tokens, req.decode_len)
+            req.predicted_bucket, req.predicted_lo, req.predicted_hi = \
+                b, lo, hi
+
+    def _select_decode(self, loads, req: Request) -> Optional[str]:
+        did = self.dispatcher.select(
+            loads, req.prompt_len, req.predicted_hi,
+            heavy=req.is_heavy_decode())
+        if did is None or self._inst(did).flip.role != Role.DECODE:
+            cands = self._decodes() or self._decodes(accepting=False)
+            did = cands[0].iid if cands else None
+        return did
+
+    def _dispatch(self, oc: PrefillOutcome, did: str) -> None:
+        req = oc.req
+        self.gsched.note_dispatch(req.rid, did)
+        delay = oc.transfer_delay_s
+        if delay is None:
+            delay = self.network.send_kv(self.cfg, req.prompt_len,
+                                         n_chunks=oc.n_chunks,
+                                         enc_len=self.cfg.cross_ctx)
+        req.phase = Phase.TRANSFER
+        self._push(self._now + delay, "kv_arrive", (oc, did))
+
+    def _on_prefill_done(self, p: InstanceRuntime):
+        outcomes = p.prefill_complete(self._now)
+        loads = self._decode_loads()
+        for oc in outcomes:
+            req = oc.req
+            if req.rid in self._cancelled:
+                continue
+            self._stream(req.rid, oc.first_token)
+            self._predict(req)
+            did = self._select_decode(loads, req)
+            if did is None:
+                # no decode instance at all: stash; the monitor's flip
+                # watcher counts these as decode backlog, and
+                # _route_pending dispatches them once a flip completes
+                self._pending_decode.append(oc)
+                continue
+            self._dispatch(oc, did)
+        p.running = False
+        self._kick_prefill(p)
+
+    # -- decode side --------------------------------------------------------
+    def _on_kv_arrive(self, oc: PrefillOutcome, did: str):
+        req = oc.req
+        if req.rid in self._cancelled:
+            return      # payload dropped; pages were freed at cancel
+        d = self._inst(did)
+        d.decode_enqueue(oc, self._now)
+        self._kick_decode(d)
+
+    def _kick_decode(self, d: InstanceRuntime):
+        if d.running or d.flip.role != Role.DECODE:
+            return
+        dur = d.decode_start(self._now)
+        if dur is None:
+            return
+        d.running = True
+        self._push(self._now + dur, "decode_done", d.iid)
+
+    def _on_decode_done(self, d: InstanceRuntime):
+        ev = d.decode_complete(self._now)
+        for rid, tok in ev.stream:
+            self._stream(rid, tok)
+        d.running = False
+        self._kick_decode(d)
+
+    def _stream(self, rid: str, tok: int) -> None:
+        buf = self._buffers.get(rid)
+        if buf is not None:
+            buf.append(tok)
+
+    # -- flips / routing ----------------------------------------------------
+    def _maybe_flip(self):
+        # complete in-flight flips; drain watchers
+        for inst in self.instances:
+            if inst.flip.state == FlipState.DRAINING:
+                if (inst.flip.role == Role.PREFILL and inst.prefill_idle()
+                        and not inst.running) or \
+                   (inst.flip.role == Role.DECODE and inst.decode_idle()
+                        and not inst.running):
+                    inst.flip.drained(self._now)
+            if inst.flip.maybe_complete(self._now):
+                # newly active in the flipped role
+                if inst.flip.role == Role.PREFILL:
+                    self._kick_prefill(inst)
+                else:
+                    self._kick_decode(inst)
+        if not self.enable_flip:
+            return
+        decode_backlog = sum(d.decode_queue_len()
+                             for d in self._decodes()) \
+            + len(self._pending_decode)
+        prefill_backlog = sum(0 if p.prefill_idle() else 1
+                              for p in self._prefills())
+        for iid in self.monitor.flip_candidates(self._now):
+            inst = self._inst(iid)
+            if not inst.flip.accepting or not inst.idle() or inst.running:
+                continue
+            if inst.flip.role == Role.PREFILL and decode_backlog > 0:
+                inst.flip.begin_flip()
+            elif inst.flip.role == Role.DECODE and prefill_backlog > 0 \
+                    and len(self._decodes()) > 1:
+                inst.flip.begin_flip()
+
+    def _route_pending(self):
+        # stashed fully-prefilled requests first: once a decode instance
+        # exists they go straight to its queue (NEVER back to prefill)
+        if self._pending_decode and self._decodes(accepting=False):
+            loads = self.monitor.broadcast()
+            still: List[PrefillOutcome] = []
+            for oc in self._pending_decode:
+                did = self._select_decode(loads, oc.req)
+                if did is None:
+                    still.append(oc)
+                    continue
+                self._dispatch(oc, did)
+            self._pending_decode = still
+        loads = {p.iid: p.prefill_queued_tokens()
+                 for p in self._prefills()}
+        if not loads:
+            return
+        for req in self._pending_arrivals:
+            iid = self.gsched.route(req, loads)
+            p = self._inst(iid)
+            p.prefill_enqueue(req)
+            loads[iid] = p.prefill_queued_tokens()
+            self._kick_prefill(p)
+        self._pending_arrivals = []
+
+    def _on_monitor(self):
+        self._decode_loads()
+        for p in self._prefills():
+            self.monitor.report_prefill(
+                p.iid, p.prefill_queued_tokens(), self._now)
+        self._maybe_flip()
+        self._route_pending()
+        busy_any = any(not i.idle() or i.running for i in self.instances)
+        if not self._events and busy_any:
+            # stall rescue: queued work but nothing in flight and no
+            # event left that would kick it (e.g. a decode admission
+            # that failed policy with an empty batch).  Kicking here is
+            # parity-safe: the pre-refactor simulator would have spun
+            # on monitor events forever in this state.
+            for inst in self.instances:
+                self._kick_prefill(inst)
+                self._kick_decode(inst)
+            if not self._events:
+                self._stall_ticks += 1
+                if self._stall_ticks > 10_000:
+                    raise RuntimeError(
+                        "cluster stalled: instances hold queued work "
+                        "but no event can make progress (pool too "
+                        "small for a request?)")
+            else:
+                self._stall_ticks = 0
+        else:
+            self._stall_ticks = 0
+        if self._events or busy_any or self._pending_arrivals \
+                or self._pending_decode:
+            self._push(self._now + self.monitor.interval_s, "monitor")
+        else:
+            self._monitor_armed = False

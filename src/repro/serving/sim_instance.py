@@ -1,0 +1,203 @@
+"""Cost-model-timed instance runtime (the simulator's execution model).
+
+This is ``DisaggSimulator``'s old ``_Instance`` plus the instance-local
+halves of its event handlers, behind the ``InstanceRuntime`` protocol.
+The operation ORDER inside each method is a faithful port of the
+pre-refactor simulator — the metric-parity test pins
+``Cluster(runtime="sim")`` to the old simulator's output bit-for-bit on
+fixed seeds, so keep RNG-consuming and accounting steps in sequence
+when editing.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from repro.core import chunking
+from repro.core.sched.decode_scheduler import DecodeScheduler
+from repro.core.sched.flip import FlipMachine, Role
+from repro.core.sched.prefill_scheduler import PrefillScheduler
+from repro.kvcache.paged import OutOfPages, PagedAllocator
+from repro.runtime.costmodel import CostModel
+from repro.runtime.request import Phase, Request
+from repro.serving.runtime import PrefillOutcome, StepEvents
+
+SWAP_BW = 4e9   # effective PCIe swap bandwidth (serialized, paper-era V100)
+
+
+class SimInstance:
+    """One engine that can serve either role; flip just switches the flag
+    (paper §3.5) — both facets' state lives in the same object."""
+
+    def __init__(self, iid: str, role: Role, *, cfg, cost: CostModel,
+                 sched_policy, sched_batch, chunk_size, decode_policy,
+                 n_pages, page_size, max_batch, co_run_predictor=True):
+        self.iid = iid
+        self.cfg = cfg
+        self.cost = cost
+        self.chunk_size = chunk_size
+        self.co_run = co_run_predictor
+        self.flip = FlipMachine(role)
+        # prefill facet
+        self.psched = PrefillScheduler(sched_policy, sched_batch)
+        self.chunks: Deque[chunking.Chunk] = deque()
+        self._inflight: Optional[chunking.Chunk] = None
+        self.reqs: Dict[str, Request] = {}
+        # decode facet
+        self.alloc = PagedAllocator(n_pages, page_size)
+        self.dsched = DecodeScheduler(self.alloc, decode_policy, max_batch)
+        self.busy = 0.0
+        self.running = False
+        self.swaps = 0
+
+    # -- prefill facet ------------------------------------------------------
+    def prefill_enqueue(self, req: Request) -> None:
+        self.psched.add(req)
+
+    def prefill_queued_tokens(self) -> int:
+        return self.psched.queued_tokens
+
+    def _refill(self) -> None:
+        batch = self.psched.next_batch(self.psched.sched_batch)
+        if batch:
+            pairs = [(r.rid, r.prompt_len) for r in batch]
+            self.chunks.extend(chunking.partition(pairs, self.chunk_size))
+            for r in batch:
+                self.reqs[r.rid] = r
+
+    def _chunk_cost(self) -> float:
+        return self.cost.prefill_time(self.chunk_size) \
+            * self.cost.predictor_overhead(self.co_run)
+
+    def prefill_start(self, now: float) -> Optional[float]:
+        if not self.chunks:
+            self._refill()
+        if not self.chunks:
+            return None
+        # pop NOW so a cancel() between start and completion can only
+        # touch queued chunks, never the one in flight (cancelled
+        # requests' segments are skipped at completion instead)
+        self._inflight = self.chunks.popleft()
+        for seg in self._inflight.segments:
+            r = self.reqs.get(seg.rid)
+            if r is not None and r.t_prefill_start < 0:
+                r.t_prefill_start = now
+                r.phase = Phase.PREFILL
+        return self._chunk_cost()
+
+    def prefill_complete(self, now: float) -> List[PrefillOutcome]:
+        chunk, self._inflight = self._inflight, None
+        self.busy += self._chunk_cost()
+        out: List[PrefillOutcome] = []
+        for seg in chunk.segments:
+            req = self.reqs.get(seg.rid)
+            if req is None:          # cancelled mid-flight
+                continue
+            req.prefilled = seg.req_start + seg.length
+            if req.prefilled >= req.prompt_len:
+                req.t_first_token = now
+                self.reqs.pop(req.rid)
+                out.append(PrefillOutcome(
+                    req=req,
+                    n_chunks=chunking.chunks_for(req.prompt_len,
+                                                 self.chunk_size)))
+        return out
+
+    def prefill_idle(self) -> bool:
+        return len(self.psched) == 0 and not self.chunks \
+            and self._inflight is None
+
+    # -- decode facet -------------------------------------------------------
+    def decode_enqueue(self, outcome: PrefillOutcome, now: float) -> None:
+        req = outcome.req
+        req.phase = Phase.DECODE_QUEUED
+        req.t_transfer_done = now
+        self.dsched.enqueue(req)
+
+    def decode_queue_len(self) -> int:
+        return len(self.dsched.queue)
+
+    def decode_load(self) -> dict:
+        return self.dsched.load()
+
+    def decode_start(self, now: float) -> Optional[float]:
+        admitted = self.dsched.admit()
+        swap_in = 0.0
+        for r in admitted:
+            if r.swapped:        # pay to bring the KV back (PCIe-class)
+                kvb = self.cfg.kv_bytes_per_token() \
+                    * (r.prompt_len + r.generated)
+                swap_in += kvb / SWAP_BW
+                r.swapped = False
+        self.busy += swap_in
+        for rid in self.dsched.running:
+            r = self.dsched.running[rid].req
+            if r.t_decode_start < 0:
+                r.t_decode_start = now
+                r.phase = Phase.DECODE
+        if not self.dsched.running:
+            return None
+        batch = len(self.dsched.running)
+        ctx = sum(ri.req.prompt_len + ri.req.generated
+                  for ri in self.dsched.running.values())
+        return self.cost.decode_time(batch, ctx) + swap_in
+
+    def decode_complete(self, now: float) -> StepEvents:
+        batch = len(self.dsched.running)
+        ctx = sum(ri.req.prompt_len + ri.req.generated
+                  for ri in self.dsched.running.values())
+        iter_time = self.cost.decode_time(batch, ctx)
+        ev = StepEvents()
+        for rid in list(self.dsched.running):
+            req = self.dsched.running[rid].req
+            try:
+                self.dsched.step_token(rid)
+            except OutOfPages:
+                # greedy-policy thrash: evict (swap out), pay the
+                # penalty, requeue
+                self.swaps += 1
+                self.alloc.swap_events += 1
+                kvb = self.cfg.kv_bytes_per_token() \
+                    * (req.prompt_len + req.generated)
+                self.busy += kvb / SWAP_BW
+                self.dsched.finish(rid)          # frees pages
+                req.phase = Phase.DECODE_QUEUED
+                req.swapped = True
+                self.dsched.enqueue(req)
+                continue
+            ev.stream.append((rid, -1))   # the sim generates lengths,
+            if self._should_finish(req):  # not token ids
+                req.phase = Phase.FINISHED
+                req.t_finish = now
+                self.dsched.finish(rid)
+                ev.finished.append(req)
+        self.busy += iter_time
+        return ev
+
+    def _should_finish(self, req: Request) -> bool:
+        if req.sampling is not None:
+            # +1: the prefill-emitted first token counts toward the cap.
+            # The sim generates lengths, not token ids, so stop_token_ids
+            # can never fire here — decode_len (submit() derives it from
+            # the cap / max_seq) stays as the hard bound so a
+            # stop-ids-only request still terminates.
+            return req.sampling.should_stop(1 + req.generated, None) \
+                or req.generated >= req.decode_len
+        return req.generated >= req.decode_len
+
+    def decode_idle(self) -> bool:
+        return not self.dsched.running and not self.dsched.queue
+
+    # -- shared -------------------------------------------------------------
+    def idle(self) -> bool:
+        return self.prefill_idle() and self.decode_idle()
+
+    def cancel(self, rid: str) -> bool:
+        known = False
+        if rid in self.reqs or self.psched.remove(rid):
+            # queued chunks only — an in-flight chunk's cancelled
+            # segments are skipped when it completes
+            self.reqs.pop(rid, None)
+            self.chunks = deque(chunking.drop_rid(self.chunks, rid))
+            known = True
+        return self.dsched.cancel(rid) or known
