@@ -21,6 +21,13 @@ unified serving API (``repro.serving.Cluster``, engine runtime, 2
 prefill + 2 decode instances) so the BENCH_*.json trajectory tracks
 real-engine multi-instance cluster throughput per PR.
 
+A seventh, ``chaos``, is the fault-tolerance trajectory anchor
+(docs/fault_tolerance.md): the same fixed-seed cluster workload runs
+failure-free and then under a seeded ``FaultSpec`` (1 of 2 decode
+instances killed mid-run + 10% of KV transfers dropped), reporting the
+recovered requests' TTFT/JCT against the failure-free baseline — the
+cost of recovery stays visible per PR.
+
 NOTE: on CPU the Pallas kernels execute in ``interpret=True`` mode, so
 absolute wall times here track dispatch/bookkeeping, not kernel speed —
 the JSON exists to anchor the perf trajectory (same workload, both
@@ -113,6 +120,56 @@ def _serve_cluster(cfg, params, reqs, *, n_prefill=2, n_decode=2):
     }
 
 
+def _serve_chaos():
+    """Failure-free vs seeded-chaos run of the SAME sim-runtime cluster
+    workload (OPT-13B cost model, 2 prefill + 2 decode): what recovery
+    costs in TTFT/JCT, and that chaos runs drain to terminal phases."""
+    from repro.configs import get_config
+    from repro.runtime.costmodel import CostModel, HardwareSpec
+    from repro.runtime.request import TERMINAL_PHASES
+    from repro.serving import Cluster, FaultEvent, FaultSpec
+    from repro.serving.faults import CRASH
+    cfg = get_config("opt_13b")
+    cost = CostModel(cfg, HardwareSpec.v100_tp2(),
+                     n_params=13_000_000_000)
+    reqs = generate("Mixed", 64, seed=1)
+
+    def one(faults):
+        cl = Cluster(cfg, runtime="sim", cost=cost,
+                     n_prefill=2, n_decode=2, faults=faults)
+        t0 = time.perf_counter()
+        r = cl.serve(copy.deepcopy(reqs))
+        wall = time.perf_counter() - t0
+        assert all(q.phase in TERMINAL_PHASES for q in r.requests), \
+            "chaos run left non-terminal requests"
+        return cl, r, wall
+
+    _, base, base_wall = one(None)
+    spec = FaultSpec(seed=0, drop_kv=0.1, events=(
+        FaultEvent(t=2.0, kind=CRASH, iid="i3"),))
+    cl, chaos, chaos_wall = one(spec)
+    return {
+        "workload": "Mixed64/opt_13b (sim runtime, 2p+2d)",
+        "baseline": {"wall_s": round(base_wall, 4),
+                     "finished": base.metrics["n"],
+                     "avg_ttft": base.metrics["avg_ttft"],
+                     "avg_jct": base.metrics["avg_jct"]},
+        "chaos": {"wall_s": round(chaos_wall, 4),
+                  "finished": chaos.metrics["n"],
+                  "failed": chaos.metrics.get("failed", 0),
+                  "avg_ttft": chaos.metrics["avg_ttft"],
+                  "avg_jct": chaos.metrics["avg_jct"],
+                  "recovered": chaos.metrics.get("recovered", 0),
+                  "avg_recovered_jct": chaos.metrics.get(
+                      "avg_recovered_jct", 0.0),
+                  "kv_retransmits": cl.network.retransmits,
+                  "injected": cl.fault_plane.stats()},
+        "recovery_jct_overhead": round(
+            chaos.metrics.get("avg_recovered_jct", 0.0)
+            / max(1e-9, base.metrics["avg_jct"]), 3),
+    }
+
+
 def _scenarios():
     gqa = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
                               dtype="float32")
@@ -134,7 +191,8 @@ def run(out_path=None, scenarios=None):
     rows = []
     all_scenarios = _scenarios()
     if scenarios:
-        known = {name for name, *_ in all_scenarios} | {"cluster"}
+        known = {name for name, *_ in all_scenarios} | {"cluster",
+                                                        "chaos"}
         unknown = set(scenarios) - known
         if unknown:
             raise SystemExit(f"unknown scenarios {sorted(unknown)}; "
@@ -197,6 +255,16 @@ def run(out_path=None, scenarios=None):
                      f"identical={identical}"))
         assert identical is not False, \
             "cluster serving changed emitted tokens vs single engine"
+    if not scenarios or "chaos" in scenarios:
+        cres = _serve_chaos()
+        report["chaos"] = cres
+        ch = cres["chaos"]
+        rows.append(("paged_serving_chaos_recovered_jct",
+                     ch["avg_recovered_jct"] * 1e3,
+                     f"recovered={ch['recovered']};"
+                     f"failed={ch['failed']};"
+                     f"retransmits={ch['kv_retransmits']};"
+                     f"jct_overhead={cres['recovery_jct_overhead']}"))
     print(json.dumps(report))
     if out_path:
         with open(out_path, "w") as f:

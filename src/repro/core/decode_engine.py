@@ -297,3 +297,16 @@ class DecodeEngine:
 
     def idle(self) -> bool:
         return not self.slots and not self.scheduler.queue
+
+    def resident(self) -> List[Request]:
+        """Requests this engine still owns (pending install, queued or
+        in a slot) — stranded if the instance dies; their KV dies with
+        the pool, so recovery re-prefills from the prompt."""
+        seen: Dict[str, Request] = {}
+        for pk in self._pending.values():
+            seen[pk.req.rid] = pk.req
+        for r in self.scheduler.queue:
+            seen[r.rid] = r
+        for st in self.slots.values():
+            seen[st.req.rid] = st.req
+        return list(seen.values())

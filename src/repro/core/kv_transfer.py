@@ -115,6 +115,14 @@ class NetworkStack:
         self.granularity = granularity
         self.bytes_sent = 0
         self.transfers = 0
+        self.retransmits = 0
+
+    def note_retransmit(self) -> None:
+        """Account one KV retransmission (the cluster's fault-tolerance
+        retry path, docs/fault_tolerance.md).  Kept separate from
+        ``transfers`` so goodput accounting can tell first attempts
+        from recovery traffic."""
+        self.retransmits += 1
 
     def transfer_time(self, payload_bytes: int) -> float:
         t = self.spec.setup_s + payload_bytes / self.spec.bandwidth_Bps

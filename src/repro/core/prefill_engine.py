@@ -180,6 +180,11 @@ class PrefillEngine:
     def idle(self) -> bool:
         return len(self.scheduler) == 0 and not self._chunk_queue
 
+    def resident(self) -> List[Request]:
+        """Requests this engine still owns (queued or mid-prefill) —
+        the set a dead instance strands (docs/fault_tolerance.md)."""
+        return list(self._reqs.values())
+
     def cancel(self, rid: str) -> bool:
         """User cancel before/while prefilling: drop the request from the
         local scheduler and the chunk queue and free any pages/cache it

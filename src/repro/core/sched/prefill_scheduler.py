@@ -71,6 +71,12 @@ class PrefillScheduler:
         self.scheduled = deque(r for r in self.scheduled if r.rid != rid)
         return len(self) < n
 
+    def all_requests(self) -> List[Request]:
+        """Non-mutating view of every queued request (raw + scheduled) —
+        unlike ``peek_all`` this never advances the scheduling window,
+        so it is safe for monitoring/recovery snapshots."""
+        return list(self.raw) + list(self.scheduled)
+
     def peek_all(self) -> List[Request]:
         if not self.scheduled:
             self._schedule_window()

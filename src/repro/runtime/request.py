@@ -24,6 +24,12 @@ class Phase(enum.Enum):
     DECODE = "decode"
     FINISHED = "finished"
     CANCELLED = "cancelled"      # user cancel — pages/slots already freed
+    FAILED = "failed"            # recovery budget exhausted / shed / no
+    #                              capacity left — terminal, never hangs
+
+
+#: phases a request can never leave (docs/fault_tolerance.md)
+TERMINAL_PHASES = (Phase.FINISHED, Phase.CANCELLED, Phase.FAILED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +92,9 @@ class Request:
     prefilled: int = 0                   # tokens prefilled so far (chunked)
     generated: int = 0
     swapped: bool = False                # victim of a memory-pressure swap
+    # --- fault tolerance (docs/fault_tolerance.md) ---
+    retries: int = 0                     # transfer retransmits + re-prefills
+    error: Optional[str] = None          # why the request FAILED
     # --- timestamps (seconds) ---
     t_prefill_start: float = -1.0
     t_first_token: float = -1.0          # == prefill done (TTFT)
@@ -114,8 +123,12 @@ class Request:
 
 def summarize(reqs: List[Request]) -> dict:
     done = [r for r in reqs if r.phase == Phase.FINISHED]
+    failed = [r for r in reqs if r.phase == Phase.FAILED]
     if not done:
-        return {"n": 0}
+        out = {"n": 0}
+        if failed:
+            out["failed"] = len(failed)
+        return out
     ttfts = np.array([r.ttft for r in done])
     jcts = np.array([r.jct for r in done])
     out = {
@@ -133,4 +146,14 @@ def summarize(reqs: List[Request]) -> dict:
              if r.t_transfer_done >= 0 and r.t_first_token >= 0]
     if xfers:
         out["avg_transfer"] = float(np.mean(xfers))
+    # fault-tolerance accounting — keys appear ONLY when a failure or a
+    # recovery actually happened, so failure-free fixed-seed runs stay
+    # byte-identical to the pre-fault-tolerance golden metrics
+    if failed:
+        out["failed"] = len(failed)
+    recovered = [r for r in done if r.retries > 0]
+    if recovered:
+        out["recovered"] = len(recovered)
+        out["avg_recovered_jct"] = float(np.mean([r.jct
+                                                  for r in recovered]))
     return out

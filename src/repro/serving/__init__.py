@@ -5,14 +5,22 @@ One orchestration core (``Cluster``) drives N instances through the
 the real JAX engines (``runtime="engine"``) — with a streaming request
 API on top: ``submit()`` → ``RequestHandle`` → iterate / ``cancel()`` /
 ``result()``, stop criteria via ``SamplingParams``.
+
+Fault tolerance (docs/fault_tolerance.md): ``FaultSpec`` injects
+deterministic instance crashes/hangs and KV-transfer faults;
+``RecoveryPolicy`` tunes detection timeouts, retry backoff and the
+retry budget; ``ClusterStallError`` carries a per-instance snapshot
+when the cluster wedges.
 """
 from repro.runtime.request import SamplingParams
-from repro.serving.cluster import (Cluster, RequestHandle, RequestResult,
-                                   SimResult)
+from repro.serving.cluster import (Cluster, ClusterStallError,
+                                   RequestHandle, RequestResult, SimResult)
+from repro.serving.faults import FaultEvent, FaultSpec, RecoveryPolicy
 from repro.serving.runtime import (InstanceRuntime, PrefillOutcome,
                                    StepEvents)
 
 __all__ = [
-    "Cluster", "RequestHandle", "RequestResult", "SimResult",
-    "SamplingParams", "InstanceRuntime", "PrefillOutcome", "StepEvents",
+    "Cluster", "ClusterStallError", "RequestHandle", "RequestResult",
+    "SimResult", "SamplingParams", "FaultSpec", "FaultEvent",
+    "RecoveryPolicy", "InstanceRuntime", "PrefillOutcome", "StepEvents",
 ]

@@ -2,10 +2,11 @@
 plane, extracted from the old ``DisaggSimulator``).
 
 One ``Cluster`` owns the event loop, the ``GlobalScheduler`` (arrival
-routing), the ``Dispatcher`` (prefill→decode placement by predicted
-length), the ``ClusterMonitor`` (load broadcast + flip watcher), the
-per-instance ``FlipMachine``s and the KV-transfer events — and drives N
-instances through the narrow ``InstanceRuntime`` protocol:
+routing + overload shedding), the ``Dispatcher`` (prefill→decode
+placement by predicted length), the ``ClusterMonitor`` (load broadcast
++ flip watcher + heartbeat liveness), the per-instance ``FlipMachine``s
+and the KV-transfer events — and drives N instances through the narrow
+``InstanceRuntime`` protocol:
 
   * ``runtime="sim"``    — ``SimInstance``: analytic cost-model timing;
     cluster-scale workloads (OPT-13B, 128+ requests) in milliseconds.
@@ -22,21 +23,35 @@ mid-flight and ``result()`` carrying per-phase timestamps.  Stop
 criteria come from ``SamplingParams`` instead of the oracle
 ``decode_len``.
 
+Fault tolerance (docs/fault_tolerance.md): pass ``faults=FaultSpec``
+to inject deterministic instance crashes/hangs and KV-transfer
+drop/corrupt/delay faults.  Detection is heartbeat-based (silent past
+``RecoveryPolicy.heartbeat_timeout_s`` ⇒ declared DEAD and fenced)
+plus per-transfer timeouts; recovery retransmits lost KV payloads with
+exponential backoff, re-dispatches to surviving decode instances,
+re-prefills requests stranded on a dead instance from the prompt, and
+fails a request terminally (``Phase.FAILED``) once its retry budget is
+exhausted.  With ``faults=None`` every failure path is unarmed and the
+event stream is byte-for-byte the pre-fault-tolerance one.
+
 Event kinds (a heap of ``(t, seq, kind, payload)``):
 
-  arrival       a submitted request reaches the global scheduler
-  prefill_done  one prefill chunk completes on an instance
-  kv_arrive     a prefilled KV lands on its decode instance (post
-                emulated transfer wait; stamps ``t_transfer_done``)
-  decode_done   one decode iteration completes on an instance
-  monitor       periodic load broadcast / flip decisions / routing
+  arrival           a submitted request reaches the global scheduler
+  prefill_done      one prefill chunk completes on an instance
+  kv_arrive         a prefilled KV lands on its decode instance (post
+                    emulated transfer wait; stamps ``t_transfer_done``)
+  decode_done       one decode iteration completes on an instance
+  monitor           periodic load broadcast / liveness / flips / routing
+  fault             a scheduled ``FaultEvent`` fires (chaos runs only)
+  transfer_timeout  sender-side per-transfer timer (chaos runs only)
+  transfer_retry    backed-off KV retransmission (chaos runs only)
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 import numpy as np
 
@@ -45,10 +60,37 @@ from repro.core.predictor import OraclePredictor
 from repro.core.sched.dispatcher import Dispatcher
 from repro.core.sched.flip import FlipState, Role
 from repro.core.sched.global_scheduler import ClusterMonitor, GlobalScheduler
-from repro.runtime.request import Phase, Request, SamplingParams, summarize
+from repro.runtime.request import (TERMINAL_PHASES, Phase, Request,
+                                   SamplingParams, summarize)
+from repro.serving.faults import (CORRUPT, CRASH, DELAY, DROP, FaultPlane,
+                                  FaultSpec, RecoveryPolicy)
 from repro.serving.runtime import InstanceRuntime, PrefillOutcome
 
 _UNSET = object()
+
+
+class ClusterStallError(RuntimeError):
+    """The cluster holds queued work but no event can make progress
+    (e.g. the page pool is too small for a request, or every instance
+    that could serve the work is gone).
+
+    ``snapshot`` maps each instance id to its state at stall time —
+    role, flip state, health, running flag, queue depths and free
+    pages — so the stall is diagnosable from the exception alone.
+    """
+
+    def __init__(self, message: str, snapshot: Dict[str, dict]):
+        lines = [message]
+        for iid, s in snapshot.items():
+            lines.append(
+                f"  {iid}: role={s['role']} flip={s['flip_state']} "
+                f"health={s['health']} running={s['running']} "
+                f"prefill_queued_tokens={s['prefill_queued_tokens']} "
+                f"decode_queued={s['decode_queued']} "
+                f"decode_batch={s['decode_batch']} "
+                f"free_pages={s['free_pages']}")
+        super().__init__("\n".join(lines))
+        self.snapshot = snapshot
 
 
 @dataclasses.dataclass
@@ -81,6 +123,8 @@ class RequestResult:
     t_transfer_done: float
     t_decode_start: float
     t_finish: float
+    retries: int = 0
+    error: Optional[str] = None
 
     @property
     def ttft(self) -> float:
@@ -99,6 +143,12 @@ class RequestHandle:
     the streaming API.  On the sim runtime tokens are ``-1``
     placeholders (the cost model generates lengths, not ids); counts
     and timing are real.
+
+    On a recovery (instance death ⇒ re-prefill) the token buffer is
+    reset and refilled by the retried attempt, so ``result().tokens``
+    is always the surviving attempt's output; an iterator that already
+    consumed tokens from the lost attempt does not replay the retried
+    prefix (``tokens_so_far()``/``result()`` are authoritative).
     """
 
     def __init__(self, cluster: "Cluster", req: Request):
@@ -115,7 +165,7 @@ class RequestHandle:
         return self._req
 
     def done(self) -> bool:
-        return self._req.phase in (Phase.FINISHED, Phase.CANCELLED)
+        return self._req.phase in TERMINAL_PHASES
 
     def tokens_so_far(self) -> List[int]:
         return list(self._cluster._buffers[self.rid])
@@ -146,7 +196,8 @@ class RequestHandle:
             t_prefill_start=r.t_prefill_start,
             t_first_token=r.t_first_token,
             t_transfer_done=r.t_transfer_done,
-            t_decode_start=r.t_decode_start, t_finish=r.t_finish)
+            t_decode_start=r.t_decode_start, t_finish=r.t_finish,
+            retries=r.retries, error=r.error)
 
 
 class Cluster:
@@ -166,7 +217,9 @@ class Cluster:
                  enable_flip: bool = False, flip_idle_s: float = 60.0,
                  co_run_predictor: bool = True,
                  max_seq: int = 128, backend: str = "auto",
-                 step_dt: float = 0.01):
+                 step_dt: float = 0.01,
+                 faults: Optional[FaultSpec] = None,
+                 recovery: Optional[RecoveryPolicy] = None):
         assert runtime in ("sim", "engine"), runtime
         self.cfg = cfg
         self.runtime = runtime
@@ -174,8 +227,12 @@ class Cluster:
                           else predictor)
         self.network = network or NetworkStack(TS_NVLINK)
         self.dispatcher = Dispatcher(dispatch_policy, page_size)
-        self.monitor = ClusterMonitor(flip_idle_s=flip_idle_s)
-        self.gsched = GlobalScheduler()
+        self.recovery = recovery or RecoveryPolicy()
+        self.monitor = ClusterMonitor(
+            flip_idle_s=flip_idle_s,
+            heartbeat_timeout_s=self.recovery.heartbeat_timeout_s)
+        self.gsched = GlobalScheduler(
+            max_queued_tokens=self.recovery.shed_queued_tokens)
         self.enable_flip = enable_flip
         self.page_size = page_size
         self.max_seq = max_seq
@@ -233,17 +290,47 @@ class Cluster:
         self._reqs: Dict[str, Request] = {}
         self._cancelled: set = set()
 
+        # -- fault plane (docs/fault_tolerance.md) -----------------------
+        self.faults = faults
+        self.fault_plane: Optional[FaultPlane] = \
+            faults.plane() if faults is not None else None
+        self._crashed: Set[str] = set()       # ground truth (undetected)
+        self._hung_until: Dict[str, float] = {}
+        self._dead: Set[str] = set()          # DECLARED dead (fenced)
+        for inst in self.instances:           # liveness baseline at t=0
+            self.monitor.heartbeat(inst.iid, 0.0)
+        if faults is not None:
+            known = {i.iid for i in self.instances}
+            for ev in faults.events:
+                assert ev.iid in known, \
+                    f"FaultEvent targets unknown instance {ev.iid!r} " \
+                    f"(have {sorted(known)})"
+                self._push(ev.t, "fault", ev)
+
     # -- role views ---------------------------------------------------------
     def _prefills(self, accepting=True):
-        return [i for i in self.instances if i.flip.role == Role.PREFILL
+        return [i for i in self.instances
+                if i.iid not in self._dead
+                and i.flip.role == Role.PREFILL
                 and (i.flip.accepting or not accepting)]
 
     def _decodes(self, accepting=True):
-        return [i for i in self.instances if i.flip.role == Role.DECODE
+        return [i for i in self.instances
+                if i.iid not in self._dead
+                and i.flip.role == Role.DECODE
                 and (i.flip.accepting or not accepting)]
 
     def _inst(self, iid) -> InstanceRuntime:
         return next(i for i in self.instances if i.iid == iid)
+
+    def _health(self, iid: str) -> str:
+        if iid in self._dead:
+            return "dead"
+        if iid in self._crashed:
+            return "crashed"          # not yet detected by heartbeats
+        if self._now < self._hung_until.get(iid, -1.0):
+            return "hung"
+        return "alive"
 
     # -- event helpers ------------------------------------------------------
     def _push(self, t, kind, payload=None):
@@ -296,9 +383,14 @@ class Cluster:
 
     def _submit_request(self, req: Request) -> RequestHandle:
         assert req.rid not in self._reqs, f"duplicate rid {req.rid}"
+        # an arrival can never predate the event clock: clamp BOTH the
+        # event time and the request's own timestamp, else a stale
+        # ``arrival=`` in the past inflates TTFT/JCT by the difference
+        t = max(req.arrival, self._now)
+        req.arrival = t
         self._reqs[req.rid] = req
         self._buffers[req.rid] = []
-        self._push(max(req.arrival, self._now), "arrival", req)
+        self._push(t, "arrival", req)
         self._arm_monitor()
         return RequestHandle(self, req)
 
@@ -307,7 +399,7 @@ class Cluster:
         whichever instance holds it, and any in-flight KV payload is
         dropped on arrival."""
         req = self._reqs.get(rid)
-        if req is None or req.phase in (Phase.FINISHED, Phase.CANCELLED):
+        if req is None or req.phase in TERMINAL_PHASES:
             return False
         self._cancelled.add(rid)
         self._pending_arrivals = [r for r in self._pending_arrivals
@@ -327,12 +419,11 @@ class Cluster:
 
     def serve(self, requests: List[Request]) -> SimResult:
         """Batch API (and the ``DisaggSimulator`` compat path): submit
-        pre-built requests, run to completion, summarize."""
+        pre-built requests, run to completion, summarize.  Shares
+        ``_submit_request`` with ``submit()`` — duplicate rids are
+        rejected and each request gets its streaming buffer."""
         for r in requests:
-            self._reqs[r.rid] = r
-            self._buffers[r.rid] = []
-            self._push(r.arrival, "arrival", r)
-        self._arm_monitor()
+            self._submit_request(r)
         self.run()
         return self.result(requests)
 
@@ -362,17 +453,111 @@ class Cluster:
                 self._pending_arrivals.append(payload)
                 self._route_pending()
         elif kind == "prefill_done":
-            self._on_prefill_done(self._inst(payload))
+            if not self._completion_lost(payload, kind, t):
+                self._on_prefill_done(self._inst(payload))
         elif kind == "kv_arrive":
             self._on_kv_arrive(*payload)
         elif kind == "decode_done":
-            self._on_decode_done(self._inst(payload))
+            if not self._completion_lost(payload, kind, t):
+                self._on_decode_done(self._inst(payload))
         elif kind == "monitor":
             self._on_monitor()
+        elif kind == "fault":
+            self._on_fault(payload)
+        elif kind == "transfer_timeout":
+            self._on_transfer_timeout(*payload)
+        elif kind == "transfer_retry":
+            self._on_transfer_retry(payload)
         return True
+
+    # -- fault plane --------------------------------------------------------
+    def _completion_lost(self, iid: str, kind: str, t: float) -> bool:
+        """A crashed/fenced instance never reports a step completion; a
+        hung one reports it when the freeze ends (the event is delayed,
+        exactly like a stalled host).  No-op unless faults fired."""
+        if iid in self._crashed or iid in self._dead:
+            return True
+        hu = self._hung_until.get(iid)
+        if hu is not None and t < hu:
+            self._push(hu, kind, iid)
+            return True
+        return False
+
+    def _on_fault(self, ev) -> None:
+        if ev.kind == CRASH:
+            self._crashed.add(ev.iid)
+        else:  # HANG: freeze until t + duration (extends any prior hang)
+            self._hung_until[ev.iid] = max(
+                self._hung_until.get(ev.iid, 0.0), ev.t + ev.duration)
+        self._arm_monitor()       # detection must run even if no work
+
+    def _declare_dead(self, iid: str) -> None:
+        """Heartbeat timeout fired: fence the instance and recover every
+        request stranded on it.  Pages/slots are reclaimed through the
+        same ``cancel()`` plumbing user cancels use; the requests then
+        re-enter the pipeline from the prompt (their KV died with the
+        instance) unless their retry budget is already spent."""
+        self._dead.add(iid)
+        self.monitor.forget(iid)
+        inst = self._inst(iid)
+        resident = inst.resident_requests()
+        for req in resident:
+            inst.cancel(req.rid)
+        for req in resident:
+            if req.rid in self._cancelled or req.phase in TERMINAL_PHASES:
+                continue
+            self._recover(req, f"instance {iid} died")
+
+    def _recover(self, req: Request, why: str) -> None:
+        """Re-prefill a stranded request from its prompt on a surviving
+        instance (or fail it once the budget is exhausted)."""
+        req.retries += 1
+        if req.retries > self.recovery.max_retries:
+            self._fail(req, f"{why}; retry budget "
+                            f"({self.recovery.max_retries}) exhausted")
+            return
+        req.phase = Phase.WAITING
+        req.prefilled = 0
+        req.generated = 0
+        req.swapped = False
+        req.t_prefill_start = req.t_first_token = -1.0
+        req.t_transfer_done = req.t_decode_start = -1.0
+        buf = self._buffers.get(req.rid)
+        if buf is not None:
+            del buf[:]        # the retried attempt refills the stream
+        self._pending_arrivals.append(req)
+
+    def _fail(self, req: Request, reason: str) -> None:
+        """Terminal failure — fast, explicit, never a hang.  Callers
+        guarantee the request holds no pages/slots at this point."""
+        req.phase = Phase.FAILED
+        req.error = reason
+        req.t_finish = self._now
+
+    def _shed_unservable(self) -> None:
+        """Graceful degradation: requests whose only possible servers
+        are gone convert to fast FAILED results instead of queueing
+        forever (capacity may still come back via a flip — only shed
+        when no alive instance could ever take the work)."""
+        alive = [i for i in self.instances if i.iid not in self._dead]
+        can_flip = self.enable_flip and bool(alive)
+        if self._pending_arrivals and not can_flip \
+                and not self._prefills(accepting=False):
+            for req in self._pending_arrivals:
+                if req.phase not in TERMINAL_PHASES:
+                    self._fail(req, "no prefill capacity left")
+            self._pending_arrivals = []
+        if self._pending_decode and not can_flip \
+                and not self._decodes(accepting=False):
+            for oc in self._pending_decode:
+                if oc.req.phase not in TERMINAL_PHASES:
+                    self._fail(oc.req, "no decode capacity left")
+            self._pending_decode = []
 
     # -- prefill side -------------------------------------------------------
     def _kick_prefill(self, p: InstanceRuntime):
+        if p.iid in self._dead:
+            return                    # fenced: no new work, no events
         if p.running or p.flip.role != Role.PREFILL:
             return
         dur = p.prefill_start(self._now)
@@ -392,7 +577,8 @@ class Cluster:
         did = self.dispatcher.select(
             loads, req.prompt_len, req.predicted_hi,
             heavy=req.is_heavy_decode())
-        if did is None or self._inst(did).flip.role != Role.DECODE:
+        if did is None or did in self._dead \
+                or self._inst(did).flip.role != Role.DECODE:
             cands = self._decodes() or self._decodes(accepting=False)
             did = cands[0].iid if cands else None
         return did
@@ -406,7 +592,22 @@ class Cluster:
                                          n_chunks=oc.n_chunks,
                                          enc_len=self.cfg.cross_ctx)
         req.phase = Phase.TRANSFER
-        self._push(self._now + delay, "kv_arrive", (oc, did))
+        attempt = req.retries
+        if self.fault_plane is None:
+            self._push(self._now + delay, "kv_arrive",
+                       (oc, did, attempt, False))
+            return
+        outcome = self.fault_plane.transfer_outcome(req.rid, attempt)
+        if outcome == DROP:
+            # payload lost in flight: only the sender's per-transfer
+            # timer notices (no kv_arrive will ever fire)
+            timeout = max(self.recovery.transfer_timeout_s, delay)
+            self._push(self._now + timeout, "transfer_timeout",
+                       (oc, attempt))
+            return
+        extra = self.faults.delay_s if outcome == DELAY else 0.0
+        self._push(self._now + delay + extra, "kv_arrive",
+                   (oc, did, attempt, outcome == CORRUPT))
 
     def _on_prefill_done(self, p: InstanceRuntime):
         outcomes = p.prefill_complete(self._now)
@@ -429,15 +630,63 @@ class Cluster:
         self._kick_prefill(p)
 
     # -- decode side --------------------------------------------------------
-    def _on_kv_arrive(self, oc: PrefillOutcome, did: str):
+    def _on_kv_arrive(self, oc: PrefillOutcome, did: str,
+                      attempt: int = 0, corrupted: bool = False):
         req = oc.req
-        if req.rid in self._cancelled:
+        if req.rid in self._cancelled or req.phase in TERMINAL_PHASES:
             return      # payload dropped; pages were freed at cancel
+        if attempt != req.retries or req.phase is not Phase.TRANSFER:
+            return      # stale attempt, superseded by a retry/recovery
+        if self.fault_plane is not None:
+            target_lost = did in self._dead or did in self._crashed
+            if corrupted or target_lost:
+                self._retry_transfer(
+                    oc, "payload corrupted" if corrupted
+                    else f"decode target {did} lost")
+                return
         d = self._inst(did)
         d.decode_enqueue(oc, self._now)
         self._kick_decode(d)
 
+    def _on_transfer_timeout(self, oc: PrefillOutcome, attempt: int):
+        req = oc.req
+        if req.rid in self._cancelled or req.phase in TERMINAL_PHASES:
+            return
+        if attempt != req.retries or req.phase is not Phase.TRANSFER:
+            return      # that attempt already landed or was superseded
+        self._retry_transfer(oc, "transfer timed out")
+
+    def _retry_transfer(self, oc: PrefillOutcome, why: str) -> None:
+        """Retransmit a lost/corrupted KV payload with exponential
+        backoff, possibly to a different decode instance; fail the
+        request once the shared retry budget is spent."""
+        req = oc.req
+        req.retries += 1
+        if req.retries > self.recovery.max_retries:
+            self._fail(req, f"kv transfer: {why}; retry budget "
+                            f"({self.recovery.max_retries}) exhausted")
+            return
+        self.network.note_retransmit()
+        self._push(self._now + self.recovery.backoff(req.retries),
+                   "transfer_retry", oc)
+
+    def _on_transfer_retry(self, oc: PrefillOutcome) -> None:
+        req = oc.req
+        if req.rid in self._cancelled or req.phase in TERMINAL_PHASES:
+            return
+        loads = self._decode_loads()
+        did = self._select_decode(loads, req)
+        if did is None:
+            # decode fleet gone: stash as decode backlog so the flip
+            # watcher can convert a prefill instance (capacity
+            # recovery); _route_pending re-dispatches after the flip
+            self._pending_decode.append(oc)
+            return
+        self._dispatch(oc, did)
+
     def _kick_decode(self, d: InstanceRuntime):
+        if d.iid in self._dead:
+            return                    # fenced: no new work, no events
         if d.running or d.flip.role != Role.DECODE:
             return
         dur = d.decode_start(self._now)
@@ -462,6 +711,8 @@ class Cluster:
     def _maybe_flip(self):
         # complete in-flight flips; drain watchers
         for inst in self.instances:
+            if inst.iid in self._dead:
+                continue
             if inst.flip.state == FlipState.DRAINING:
                 if (inst.flip.role == Role.PREFILL and inst.prefill_idle()
                         and not inst.running) or \
@@ -481,7 +732,14 @@ class Cluster:
             + len(self._pending_decode)
         prefill_backlog = sum(0 if p.prefill_idle() else 1
                               for p in self._prefills())
+        if self.faults is not None and self._pending_arrivals:
+            # capacity recovery: arrivals stranded because the prefill
+            # fleet died count as prefill backlog so a surviving decode
+            # instance can flip back (faults-only — parity-safe)
+            prefill_backlog += 1
         for iid in self.monitor.flip_candidates(self._now):
+            if iid in self._dead:
+                continue
             inst = self._inst(iid)
             if not inst.flip.accepting or not inst.idle() or inst.running:
                 continue
@@ -509,6 +767,15 @@ class Cluster:
         if not loads:
             return
         for req in self._pending_arrivals:
+            if req.rid in self._cancelled or req.phase in TERMINAL_PHASES:
+                continue
+            if self.gsched.overloaded(loads):
+                # overload shedding: fast failure instead of unbounded
+                # queueing (docs/fault_tolerance.md)
+                self._fail(req, "shed: every prefill queue over "
+                                f"{self.gsched.max_queued_tokens} "
+                                "queued tokens")
+                continue
             iid = self.gsched.route(req, loads)
             p = self._inst(iid)
             p.prefill_enqueue(req)
@@ -516,36 +783,74 @@ class Cluster:
             self._kick_prefill(p)
         self._pending_arrivals = []
 
+    def _snapshot(self) -> Dict[str, dict]:
+        """Per-instance state for ``ClusterStallError`` diagnostics."""
+        snap: Dict[str, dict] = {}
+        for i in self.instances:
+            load = i.decode_load()
+            snap[i.iid] = {
+                "role": i.flip.role.value,
+                "flip_state": i.flip.state.value,
+                "health": self._health(i.iid),
+                "running": i.running,
+                "prefill_queued_tokens": i.prefill_queued_tokens(),
+                "decode_queued": load.get("queued", 0),
+                "decode_batch": load.get("batch", 0),
+                "free_pages": load.get("free_pages", 0),
+            }
+        return snap
+
     def _on_monitor(self):
+        # liveness first: every responsive instance heartbeats; anyone
+        # silent past the timeout is declared dead and recovered
+        for inst in self.instances:
+            iid = inst.iid
+            if iid in self._dead or iid in self._crashed:
+                continue
+            hu = self._hung_until.get(iid)
+            if hu is not None:
+                if self._now < hu:
+                    continue          # frozen: heartbeat missed
+                del self._hung_until[iid]
+            self.monitor.heartbeat(iid, self._now)
+        for iid in self.monitor.silent(self._now):
+            if iid not in self._dead:
+                self._declare_dead(iid)
+        if self.faults is not None:
+            self._shed_unservable()
         self._decode_loads()
         for p in self._prefills():
             self.monitor.report_prefill(
                 p.iid, p.prefill_queued_tokens(), self._now)
         self._maybe_flip()
         self._route_pending()
-        busy_any = any(not i.idle() or i.running for i in self.instances)
-        if not self._events and busy_any:
+        busy_any = any(not i.idle() or i.running for i in self.instances
+                       if i.iid not in self._dead)
+        pending_work = busy_any or self._pending_arrivals \
+            or self._pending_decode
+        if not self._events and pending_work:
             # stall rescue: queued work but nothing in flight and no
             # event left that would kick it (e.g. a decode admission
             # that failed policy with an empty batch).  Kicking here is
             # parity-safe: the pre-refactor simulator would have spun
             # on monitor events forever in this state.
             for inst in self.instances:
+                if inst.iid in self._dead:
+                    continue
                 self._kick_prefill(inst)
                 self._kick_decode(inst)
             if not self._events:
                 self._stall_ticks += 1
                 if self._stall_ticks > 10_000:
-                    raise RuntimeError(
+                    raise ClusterStallError(
                         "cluster stalled: instances hold queued work "
                         "but no event can make progress (pool too "
-                        "small for a request?)")
+                        "small for a request?)", self._snapshot())
             else:
                 self._stall_ticks = 0
         else:
             self._stall_ticks = 0
-        if self._events or busy_any or self._pending_arrivals \
-                or self._pending_decode:
+        if self._events or pending_work:
             self._push(self._now + self.monitor.interval_s, "monitor")
         else:
             self._monitor_armed = False

@@ -111,3 +111,9 @@ class EngineInstance:
     def cancel(self, rid: str) -> bool:
         cancelled = self.pe.cancel(rid)
         return self.de.cancel(rid) or cancelled
+
+    def resident_requests(self) -> List[Request]:
+        seen = {r.rid: r for r in self.pe.resident()}
+        for r in self.de.resident():
+            seen.setdefault(r.rid, r)
+        return list(seen.values())

@@ -95,3 +95,11 @@ class InstanceRuntime(Protocol):
     def idle(self) -> bool: ...
 
     def cancel(self, rid: str) -> bool: ...
+
+    def resident_requests(self) -> List[Request]:
+        """Every request currently owned by this instance — prefill
+        queue/chunks, decode queue/slots, in-flight steps.  Recovery
+        support (docs/fault_tolerance.md): when the cluster declares an
+        instance dead it reclaims these via ``cancel()`` and re-drives
+        them from the prompt on surviving instances."""
+        ...

@@ -201,3 +201,15 @@ class SimInstance:
             self.chunks = deque(chunking.drop_rid(self.chunks, rid))
             known = True
         return self.dsched.cancel(rid) or known
+
+    def resident_requests(self) -> List[Request]:
+        seen: Dict[str, Request] = {}
+        for r in self.psched.all_requests():
+            seen[r.rid] = r
+        for r in self.reqs.values():          # chunk-queued / in-flight
+            seen[r.rid] = r
+        for r in self.dsched.queue:
+            seen[r.rid] = r
+        for ri in self.dsched.running.values():
+            seen[ri.req.rid] = ri.req
+        return list(seen.values())

@@ -1,0 +1,328 @@
+"""Fault-tolerance tests (repro.serving.faults — docs/fault_tolerance.md).
+
+The contract under test, on BOTH runtimes:
+
+* chaos runs terminate — with a seeded ``FaultSpec`` (an instance
+  killed mid-run, a fraction of KV transfers dropped) every request
+  reaches a terminal phase (FINISHED or FAILED), nothing hangs, and
+  every allocator page is back on the free list;
+* recovery is correct — requests recovered from a dead engine instance
+  re-prefill from the prompt and produce the exact tokens of a
+  failure-free run;
+* detection is calibrated — a hang shorter than the heartbeat timeout
+  delays completions but kills nothing; a longer one gets the instance
+  declared dead and fenced;
+* budgets are enforced — permanent transfer loss fails the request
+  after ``max_retries`` retransmits instead of retrying forever;
+* degradation is graceful — overload shedding fast-fails arrivals and
+  total capacity loss fails stranded work instead of queueing it;
+* and the deterministic plane really is deterministic.
+"""
+import copy
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.runtime.costmodel import CostModel, HardwareSpec
+from repro.runtime.request import TERMINAL_PHASES, Phase
+from repro.runtime.workload import generate
+from repro.serving import (Cluster, ClusterStallError, FaultEvent,
+                           FaultSpec, RecoveryPolicy, SamplingParams)
+from repro.serving.faults import CRASH, HANG
+
+
+@pytest.fixture(scope="module")
+def opt13b():
+    cfg = get_config("opt_13b")
+    return cfg, CostModel(cfg, HardwareSpec.v100_tp2(),
+                          n_params=13_000_000_000)
+
+
+def _assert_no_leaks(cluster):
+    """Every page back on the free list on EVERY instance — including
+    the dead one (recovery reclaims through cancel())."""
+    for i in cluster.instances:
+        if cluster.runtime == "sim":
+            assert i.alloc.free_pages == i.alloc.n_pages, i.iid
+        else:
+            assert i.de.alloc.free_pages == i.de.alloc.n_pages, i.iid
+            assert i.pe.alloc.free_pages == i.pe.alloc.n_pages, i.iid
+
+
+# -- the deterministic plane ------------------------------------------------
+def test_fault_plane_is_deterministic_and_rate_accurate():
+    spec = FaultSpec(seed=7, drop_kv=0.1, corrupt_kv=0.05, delay_kv=0.2,
+                     delay_s=0.01)
+    a, b = spec.plane(), spec.plane()
+    draws = [(f"r{i}", k) for i in range(500) for k in range(2)]
+    out_a = [a.transfer_outcome(r, k) for r, k in draws]
+    # same spec, reversed call order: identical per-key outcomes
+    out_b = {d: b.transfer_outcome(*d) for d in reversed(draws)}
+    assert out_a == [out_b[d] for d in draws]
+    assert a.stats() == b.stats()
+    n = len(draws)
+    assert a.dropped / n == pytest.approx(0.1, abs=0.03)
+    assert a.corrupted / n == pytest.approx(0.05, abs=0.03)
+    assert a.delayed / n == pytest.approx(0.2, abs=0.03)
+    # a different seed draws a different schedule
+    c = FaultSpec(seed=8, drop_kv=0.1, corrupt_kv=0.05,
+                  delay_kv=0.2).plane()
+    assert [c.transfer_outcome(r, k) for r, k in draws] != out_a
+
+
+def test_fault_spec_validation():
+    with pytest.raises(AssertionError):
+        FaultSpec(drop_kv=0.8, corrupt_kv=0.3)      # rates sum > 1
+    with pytest.raises(AssertionError):
+        FaultEvent(t=1.0, kind=HANG, iid="i0")      # hang w/o duration
+    with pytest.raises(AssertionError):
+        FaultEvent(t=1.0, kind="explode", iid="i0")
+    cfg = get_config("opt_13b")
+    cost = CostModel(cfg, HardwareSpec.v100_tp2(),
+                     n_params=13_000_000_000)
+    with pytest.raises(AssertionError):             # unknown instance
+        Cluster(cfg, runtime="sim", cost=cost, faults=FaultSpec(
+            events=(FaultEvent(t=1.0, kind=CRASH, iid="i9"),)))
+
+
+def test_recovery_policy_backoff():
+    p = RecoveryPolicy(retry_backoff_s=0.02, backoff_factor=2.0)
+    assert p.backoff(1) == pytest.approx(0.02)
+    assert p.backoff(2) == pytest.approx(0.04)
+    assert p.backoff(3) == pytest.approx(0.08)
+
+
+# -- sim runtime: the acceptance chaos scenario -----------------------------
+def test_sim_chaos_decode_death_and_dropped_transfers(opt13b):
+    """Kill 1 of 2 decode instances mid-run and drop 10% of KV
+    transfers: the run terminates, every request reaches a terminal
+    phase, recovered requests really finish, and no page leaks —
+    including on the dead instance."""
+    cfg, cost = opt13b
+    reqs = generate("Mixed", 64, seed=1)
+    faults = FaultSpec(seed=0, drop_kv=0.1, events=(
+        FaultEvent(t=2.0, kind=CRASH, iid="i3"),))
+    cluster = Cluster(cfg, runtime="sim", cost=cost,
+                      n_prefill=2, n_decode=2, faults=faults)
+    r = cluster.serve(copy.deepcopy(reqs))
+
+    assert cluster._dead == {"i3"}
+    for req in r.requests:
+        assert req.phase in TERMINAL_PHASES, (req.rid, req.phase)
+        if req.phase == Phase.FAILED:
+            assert req.error
+    assert cluster.fault_plane.dropped > 0
+    assert cluster.network.retransmits > 0
+    assert r.metrics.get("recovered", 0) > 0
+    assert r.metrics["n"] + r.metrics.get("failed", 0) == 64
+    _assert_no_leaks(cluster)
+    # deterministic chaos: an identical run replays identically
+    r2 = Cluster(cfg, runtime="sim", cost=cost, n_prefill=2, n_decode=2,
+                 faults=faults).serve(copy.deepcopy(reqs))
+    assert r2.metrics == r.metrics
+
+
+def test_sim_hang_below_heartbeat_timeout_recovers_in_place(opt13b):
+    """A hang shorter than the heartbeat timeout is a latency blip:
+    step completions are delayed until the freeze ends, nothing is
+    declared dead, nothing retries, every request finishes."""
+    cfg, cost = opt13b
+    reqs = generate("Mixed", 16, seed=4)
+    faults = FaultSpec(events=(
+        FaultEvent(t=0.5, kind=HANG, iid="i0", duration=0.3),))
+    cluster = Cluster(cfg, runtime="sim", cost=cost,
+                      n_prefill=1, n_decode=1, faults=faults)
+    r = cluster.serve(copy.deepcopy(reqs))
+    assert not cluster._dead
+    assert r.metrics["n"] == 16
+    assert "failed" not in r.metrics
+    assert "recovered" not in r.metrics
+    _assert_no_leaks(cluster)
+
+
+def test_sim_hang_past_heartbeat_timeout_is_fenced(opt13b):
+    """A hang LONGER than the heartbeat timeout gets the instance
+    declared dead; it stays fenced even after the freeze would have
+    ended (no split-brain re-admission), and its requests recover to
+    the surviving prefill instance."""
+    cfg, cost = opt13b
+    reqs = generate("Mixed", 16, seed=4)
+    faults = FaultSpec(events=(
+        FaultEvent(t=0.5, kind=HANG, iid="i0", duration=30.0),))
+    cluster = Cluster(cfg, runtime="sim", cost=cost,
+                      n_prefill=2, n_decode=1, faults=faults)
+    r = cluster.serve(copy.deepcopy(reqs))
+    assert cluster._dead == {"i0"}
+    for req in r.requests:
+        assert req.phase in TERMINAL_PHASES
+    assert r.metrics["n"] + r.metrics.get("failed", 0) == 16
+    _assert_no_leaks(cluster)
+
+
+def test_sim_permanent_drop_exhausts_retry_budget(opt13b):
+    """drop_kv=1.0: every transfer attempt is lost, so each request
+    burns its whole retry budget and fails terminally — fast and
+    explicit, never a hang."""
+    cfg, cost = opt13b
+    policy = RecoveryPolicy(max_retries=3)
+    cluster = Cluster(cfg, runtime="sim", cost=cost,
+                      faults=FaultSpec(drop_kv=1.0), recovery=policy)
+    reqs = generate("LPLD", 4, seed=2)
+    r = cluster.serve(copy.deepcopy(reqs))
+    assert r.metrics == {"n": 0, "failed": 4}
+    for req in r.requests:
+        assert req.phase == Phase.FAILED
+        assert "retry budget" in req.error
+        assert req.retries == policy.max_retries + 1
+    # retransmits: max_retries per request (the final increment fails
+    # the request before another retransmit goes on the wire)
+    assert cluster.network.retransmits == 4 * policy.max_retries
+    assert cluster.fault_plane.dropped == 4 * (policy.max_retries + 1)
+    _assert_no_leaks(cluster)
+
+
+def test_sim_corrupt_and_delay_paths(opt13b):
+    """corrupt_kv: the payload is NACKed on arrival and retransmitted;
+    delay_kv: the payload lands late but intact.  Both end FINISHED."""
+    cfg, cost = opt13b
+    faults = FaultSpec(seed=3, corrupt_kv=0.3, delay_kv=0.3,
+                       delay_s=0.05)
+    cluster = Cluster(cfg, runtime="sim", cost=cost, faults=faults)
+    reqs = generate("Mixed", 24, seed=6)
+    r = cluster.serve(copy.deepcopy(reqs))
+    assert r.metrics["n"] == 24
+    assert "failed" not in r.metrics
+    assert cluster.fault_plane.corrupted > 0
+    assert cluster.fault_plane.delayed > 0
+    assert r.metrics.get("recovered", 0) > 0   # corrupted ⇒ retried
+    _assert_no_leaks(cluster)
+
+
+def test_sim_overload_shedding(opt13b):
+    """With every prefill queue at/over the shed bound, new arrivals
+    fast-fail instead of queueing unboundedly."""
+    cfg, cost = opt13b
+    cluster = Cluster(cfg, runtime="sim", cost=cost,
+                      recovery=RecoveryPolicy(shed_queued_tokens=600))
+    hs = [cluster.submit(prompt_tokens=list(range(512)),
+                         sampling=SamplingParams(max_new_tokens=4))
+          for _ in range(4)]
+    cluster.run()
+    phases = [h.result().phase for h in hs]
+    shed = [h for h in hs if h.result().phase == Phase.FAILED]
+    assert cluster.gsched.shed == len(shed) > 0
+    assert Phase.FINISHED in phases         # early arrivals still serve
+    for h in shed:
+        assert "shed" in h.result().error
+    _assert_no_leaks(cluster)
+
+
+def test_sim_total_decode_loss_fails_stranded_work(opt13b):
+    """Both decode instances die and flip is disabled: prefilled work
+    has no possible server, so it fails fast instead of waiting
+    forever (and the run still terminates)."""
+    cfg, cost = opt13b
+    faults = FaultSpec(events=(
+        FaultEvent(t=0.2, kind=CRASH, iid="i1"),))
+    cluster = Cluster(cfg, runtime="sim", cost=cost,
+                      n_prefill=1, n_decode=1, faults=faults)
+    reqs = generate("Mixed", 8, seed=9)
+    r = cluster.serve(copy.deepcopy(reqs))
+    for req in r.requests:
+        assert req.phase in TERMINAL_PHASES
+    assert r.metrics.get("failed", 0) > 0
+    _assert_no_leaks(cluster)
+
+
+def test_stall_error_carries_cluster_snapshot(opt13b):
+    """A request that can NEVER fit the decode page pool wedges the
+    cluster; the stall error must carry a per-instance snapshot
+    (role/health/queues/pages) instead of a bare message."""
+    cfg, cost = opt13b
+    cluster = Cluster(cfg, runtime="sim", cost=cost, n_pages=2,
+                      page_size=16, max_seq=4096)
+    cluster.submit(prompt_tokens=list(range(200)),
+                   sampling=SamplingParams(max_new_tokens=8))
+    with pytest.raises(ClusterStallError) as ei:
+        cluster.run()
+    snap = ei.value.snapshot
+    assert set(snap) == {"i0", "i1"}
+    d = snap["i1"]
+    assert d["role"] == "decode" and d["health"] == "alive"
+    assert d["decode_queued"] == 1          # the unservable request
+    assert d["free_pages"] == 2
+    assert "i1: role=decode" in str(ei.value)
+
+
+# -- engine runtime ---------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    cfg = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                              dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine_cluster(cfg, params, **kw):
+    kw.setdefault("n_prefill", 2)
+    kw.setdefault("n_decode", 2)
+    return Cluster(cfg, runtime="engine", params=params, chunk_size=16,
+                   max_seq=128, max_batch=8, n_pages=256, **kw)
+
+
+def test_engine_chaos_recovers_with_identical_tokens(engine_setup):
+    """Engine-runtime chaos: kill a decode instance mid-run + drop 10%
+    of transfers.  Every finished request must produce EXACTLY the
+    tokens of the failure-free run (re-prefill from the prompt is
+    deterministic), and all pages come back on every instance."""
+    cfg, params = engine_setup
+    reqs = generate("Mixed", 8, seed=0, max_prompt=48, max_decode=12,
+                    vocab_size=cfg.vocab_size)
+
+    base = _engine_cluster(cfg, params)
+    want = {h.rid: h.result().tokens
+            for h in [base.submit(request=r)
+                      for r in copy.deepcopy(reqs)]}
+
+    faults = FaultSpec(seed=1, drop_kv=0.1, events=(
+        FaultEvent(t=0.06, kind=CRASH, iid="i3"),))
+    cluster = _engine_cluster(cfg, params, faults=faults)
+    handles = [cluster.submit(request=r) for r in copy.deepcopy(reqs)]
+    cluster.run()
+
+    assert cluster._dead == {"i3"}
+    n_recovered = 0
+    for h in handles:
+        res = h.result()
+        assert res.phase in TERMINAL_PHASES
+        if res.phase == Phase.FINISHED:
+            assert res.tokens == want[h.rid], h.rid
+            n_recovered += res.retries > 0
+        else:
+            assert res.phase == Phase.FAILED and res.error
+    assert n_recovered > 0
+    _assert_no_leaks(cluster)
+
+
+def test_engine_transfer_drop_retries_transparently(engine_setup):
+    """Dropped first attempts retry within budget — all requests still
+    finish, with retransmits on the wire."""
+    cfg, params = engine_setup
+    # ~40% first-attempt loss, retries draw fresh keys and get through
+    faults = FaultSpec(seed=5, drop_kv=0.4)
+    cluster = _engine_cluster(cfg, params, n_prefill=1, n_decode=1,
+                              faults=faults)
+    reqs = generate("Mixed", 6, seed=3, max_prompt=32, max_decode=8,
+                    vocab_size=cfg.vocab_size)
+    handles = [cluster.submit(request=r) for r in reqs]
+    cluster.run()
+    for h in handles:
+        assert h.result().phase == Phase.FINISHED
+    assert cluster.fault_plane.dropped > 0
+    assert cluster.network.retransmits == cluster.fault_plane.dropped
+    _assert_no_leaks(cluster)

@@ -348,3 +348,120 @@ def test_sampling_params_on_sim_runtime(opt13b):
     assert res.phase == Phase.FINISHED
     assert len(res.tokens) == 9         # -1 placeholders, counted
     assert res.t_finish > res.t_first_token >= 0
+
+
+# -- lifecycle edges: cancel mid-transfer, flip with queued work ------------
+def _pump_until(cluster, pred, cap=10_000):
+    for _ in range(cap):
+        if pred():
+            return True
+        if not cluster._pump():
+            return False
+    return False
+
+
+def test_sim_cancel_during_transfer(opt13b):
+    """cancel() while the KV payload is IN FLIGHT: the kv_arrive event
+    must be dropped on the floor — the request never reaches a decode
+    queue, no decode pages are ever allocated for it."""
+    cfg, cost = opt13b
+    cluster = Cluster(cfg, runtime="sim", cost=cost)
+    h = cluster.submit(prompt_tokens=list(range(48)),
+                       sampling=SamplingParams(max_new_tokens=6))
+    assert _pump_until(cluster,
+                       lambda: h.request.phase is Phase.TRANSFER)
+    assert h.cancel()
+    cluster.run()
+    assert h.result().phase == Phase.CANCELLED
+    assert h.result().tokens == [-1]    # the prefill-emitted first token
+    for i in cluster.instances:
+        assert i.alloc.free_pages == i.alloc.n_pages
+        assert i.decode_queue_len() == 0 and i.decode_idle()
+
+
+def test_engine_cancel_during_transfer(engine_setup):
+    cfg, params = engine_setup
+    cluster = _engine_cluster(cfg, params, n_prefill=1, n_decode=1)
+    import numpy as np
+    rng = np.random.default_rng(7)
+    h = cluster.submit(
+        rng.integers(1, cfg.vocab_size, size=18).astype(np.int32),
+        sampling=SamplingParams(max_new_tokens=10))
+    h2 = cluster.submit(
+        rng.integers(1, cfg.vocab_size, size=9).astype(np.int32),
+        sampling=SamplingParams(max_new_tokens=3))
+    assert _pump_until(cluster,
+                       lambda: h.request.phase is Phase.TRANSFER)
+    assert h.cancel()
+    cluster.run()
+    assert h.result().phase == Phase.CANCELLED
+    assert h2.result().phase == Phase.FINISHED
+    assert len(h2.result().tokens) == 3
+    for i in cluster.instances:
+        assert i.de.alloc.free_pages == i.de.alloc.n_pages
+        assert i.pe.alloc.free_pages == i.pe.alloc.n_pages
+
+
+def test_sim_flip_during_drain_with_queued_work(opt13b):
+    """A manual begin_flip() on a prefill instance that still holds
+    queued work: the instance keeps prefilling while DRAINING (it just
+    stops accepting new routes), flips only once empty, and every
+    request finishes — prefilled exactly once."""
+    from repro.core.sched.flip import Role
+    cfg, cost = opt13b
+    cluster = Cluster(cfg, runtime="sim", cost=cost,
+                      n_prefill=2, n_decode=1)
+    hs = [cluster.submit(prompt_tokens=list(range(64 + 8 * k)),
+                         sampling=SamplingParams(max_new_tokens=5))
+          for k in range(6)]
+    i0 = cluster._inst("i0")
+    assert _pump_until(cluster, lambda: not i0.prefill_idle())
+    i0.flip.begin_flip()                # drain-then-flip, work queued
+    cluster.run()
+    assert i0.flip.role == Role.DECODE
+    assert i0.flip.flips == 1
+    for h in hs:
+        res = h.result()
+        assert res.phase == Phase.FINISHED
+        assert len(res.tokens) == 5
+        assert h.request.prefilled == h.request.prompt_len
+
+
+def test_engine_flip_during_drain_with_queued_work(engine_setup):
+    from repro.core.sched.flip import Role
+    cfg, params = engine_setup
+    cluster = _engine_cluster(cfg, params, n_prefill=2, n_decode=1)
+    import numpy as np
+    rng = np.random.default_rng(8)
+    hs = [cluster.submit(
+            rng.integers(1, cfg.vocab_size, size=n).astype(np.int32),
+            sampling=SamplingParams(max_new_tokens=4))
+          for n in (33, 21, 40, 17, 26, 12)]
+    i0 = cluster._inst("i0")
+    assert _pump_until(cluster, lambda: not i0.prefill_idle())
+    i0.flip.begin_flip()
+    cluster.run()
+    assert i0.flip.role == Role.DECODE
+    assert i0.flip.flips == 1
+    for h in hs:
+        res = h.result()
+        assert res.phase == Phase.FINISHED
+        assert len(res.tokens) == 4
+
+
+def test_arrival_clamped_to_event_clock(opt13b):
+    """A stale ``arrival`` in the past must be clamped to the cluster
+    clock — otherwise TTFT/JCT are inflated by the backdated gap."""
+    cfg, cost = opt13b
+    cluster = Cluster(cfg, runtime="sim", cost=cost)
+    cluster.submit(prompt_tokens=list(range(32)),
+                   sampling=SamplingParams(max_new_tokens=40)).result()
+    now = cluster._now
+    assert now > 0
+    h = cluster.submit(prompt_tokens=list(range(16)), arrival=0.0,
+                       sampling=SamplingParams(max_new_tokens=3))
+    assert h.request.arrival == now     # clamped, not backdated
+    res = h.result()
+    assert res.phase == Phase.FINISHED
+    assert 0 <= res.ttft < res.jct
+    assert res.arrival == now
