@@ -1,0 +1,160 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Fleet-scale sim benchmarks (BENCH_fleet.json) — JAX-free.
+
+Drives ``Cluster(runtime="sim")`` through ``repro.fleet`` at cluster
+scale (the paper's §5 regime, orders of magnitude past the figure
+benches) and reports serving metrics (TTFT/JCT/goodput) next to
+harness throughput (wall seconds, events/sec, per-event-kind profile)
+so BOTH trajectories — serving quality and simulator speed — are
+gated per PR by tools/check_bench_regression.py.
+
+Three scenario families per preset:
+
+  * ``diurnal``   — a full sinusoidal "day" over the whole fleet at
+                    ~80% decode utilization (profiled run).
+  * ``pd_ratio``  — prefill:decode split sweep at a fixed instance
+                    budget and arrival rate (paper Fig. 19 regime:
+                    the wrong split starves one phase).
+  * ``bandwidth`` — KV-transfer link sweep (NVLink / RoCE / TCP
+                    socket) on a fixed trace; shows the transfer wait
+                    and TTFT cost of slower interconnects (§3.2).
+
+Presets: ``ci`` (64 instances x 10k requests, fits the CI smoke
+budget) and ``full`` (128 instances x 100k requests, the acceptance
+scale — minutes on a laptop-class CPU).
+
+    PYTHONPATH=src python -m benchmarks.fleet [--preset ci|full]
+                                              [--out BENCH_fleet.json]
+                                              [--no-profile]
+"""
+import argparse
+import json
+
+from benchmarks.common import emit
+from repro.core.kv_transfer import NetworkStack
+from repro.fleet import FleetSpec, generate_trace, run_fleet
+from repro.fleet.harness import LINKS
+
+SEED = 7
+
+PRESETS = {
+    # rates put the decode fleet near 80% utilization for the diurnal
+    # day (mean mixed request ~450 prompt + ~210 decode tokens)
+    "ci": {
+        "diurnal": dict(n=10_000, n_prefill=44, n_decode=20, rate=75.0,
+                        period_s=135.0, n_tenants=32),
+        "pd_ratio": dict(n=2_000, total=16, rate=20.0,
+                         ratios=((13, 3), (12, 4), (10, 6), (8, 8),
+                                 (6, 10))),
+        "bandwidth": dict(n=2_000, n_prefill=8, n_decode=8, rate=25.0,
+                          links=("nvlink", "roce", "socket")),
+    },
+    "full": {
+        "diurnal": dict(n=100_000, n_prefill=88, n_decode=40, rate=150.0,
+                        period_s=660.0, n_tenants=64),
+        "pd_ratio": dict(n=10_000, total=32, rate=40.0,
+                         ratios=((26, 6), (24, 8), (20, 12), (16, 16),
+                                 (12, 20))),
+        "bandwidth": dict(n=5_000, n_prefill=16, n_decode=16, rate=50.0,
+                          links=("nvlink", "roce", "socket")),
+    },
+}
+
+
+def _report_row(rep):
+    m = rep.metrics
+    return {
+        "avg_ttft": m.get("avg_ttft"), "p90_ttft": m.get("p90_ttft"),
+        "avg_jct": m.get("avg_jct"), "p90_jct": m.get("p90_jct"),
+        "avg_transfer": m.get("avg_transfer"),
+        "goodput": rep.goodput, "goodput_rps": rep.goodput_rps,
+        "finished": rep.finished, "failed": rep.failed,
+        "sim_makespan_s": rep.sim_makespan_s,
+        "wall_s": rep.wall_s, "events": rep.events,
+        "events_per_s": rep.events_per_s,
+    }
+
+
+def _scenario_diurnal(p, profile):
+    trace = generate_trace("Mixed", p["n"], seed=SEED, process="diurnal",
+                           rate=p["rate"], period_s=p["period_s"],
+                           n_tenants=p["n_tenants"])
+    spec = FleetSpec(n_prefill=p["n_prefill"], n_decode=p["n_decode"],
+                     monitor_interval_s=0.5)
+    rep = run_fleet(trace, spec, profile=profile)
+    out = {"spec": spec.to_json(), "trace": trace.summary(),
+           "report": _report_row(rep)}
+    if rep.profile is not None:
+        out["profile"] = rep.profile
+    return out, rep
+
+
+def _scenario_pd_ratio(p):
+    trace = generate_trace("Mixed", p["n"], seed=SEED, process="poisson",
+                           rate=p["rate"])
+    sweep = []
+    for n_prefill, n_decode in p["ratios"]:
+        spec = FleetSpec(n_prefill=n_prefill, n_decode=n_decode,
+                         monitor_interval_s=0.5)
+        rep = run_fleet(trace.to_requests(), spec)
+        sweep.append(dict(n_prefill=n_prefill, n_decode=n_decode,
+                          **_report_row(rep)))
+    return {"trace": trace.summary(), "total": p["total"], "sweep": sweep}
+
+
+def _scenario_bandwidth(p):
+    trace = generate_trace("Mixed", p["n"], seed=SEED, process="poisson",
+                           rate=p["rate"])
+    sweep = []
+    for link in p["links"]:
+        spec = FleetSpec(n_prefill=p["n_prefill"], n_decode=p["n_decode"],
+                         link=link, monitor_interval_s=0.5)
+        rep = run_fleet(trace.to_requests(), spec,
+                        network=NetworkStack(LINKS[link]))
+        sweep.append(dict(link=link, **_report_row(rep)))
+    return {"trace": trace.summary(), "sweep": sweep}
+
+
+def run(out_path=None, preset="ci", profile=True):
+    p = PRESETS[preset]
+    report = {"preset": preset, "seed": SEED}
+    rows = []
+
+    diurnal, rep = _scenario_diurnal(p["diurnal"], profile)
+    report["diurnal"] = diurnal
+    rows.append((f"fleet_diurnal_{preset}",
+                 rep.wall_s * 1e6 / max(1, rep.events),
+                 f"events_per_s={rep.events_per_s};"
+                 f"goodput={rep.goodput};"
+                 f"avg_jct={rep.metrics.get('avg_jct', 0):.3f}"))
+
+    report["pd_ratio"] = _scenario_pd_ratio(p["pd_ratio"])
+    best = max(report["pd_ratio"]["sweep"], key=lambda s: s["goodput"])
+    rows.append((f"fleet_pd_ratio_{preset}", 0.0,
+                 f"best={best['n_prefill']}p{best['n_decode']}d;"
+                 f"goodput={best['goodput']}"))
+
+    report["bandwidth"] = _scenario_bandwidth(p["bandwidth"])
+    for s in report["bandwidth"]["sweep"]:
+        rows.append((f"fleet_bw_{s['link']}_{preset}",
+                     (s["avg_transfer"] or 0) * 1e6,
+                     f"avg_ttft={s['avg_ttft']:.4f};"
+                     f"goodput={s['goodput']}"))
+
+    print(json.dumps(report))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="ci", choices=sorted(PRESETS))
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this path "
+                         "(CI uploads it as the BENCH_* artifact)")
+    ap.add_argument("--no-profile", action="store_true",
+                    help="skip per-event-kind event-loop profiling")
+    args = ap.parse_args()
+    run(args.out, preset=args.preset, profile=not args.no_profile)

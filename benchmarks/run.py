@@ -28,6 +28,7 @@ ALL = [
     ("flip_latency", "benchmarks.flip_latency"),
     ("roofline", "benchmarks.roofline_report"),
     ("paged_serving", "benchmarks.paged_serving"),
+    ("fleet", "benchmarks.fleet"),
 ]
 
 

@@ -26,6 +26,11 @@ POLICIES = ("greedy", "reserve-static", "reserve-dynamic")
 @dataclasses.dataclass
 class RunningInfo:
     req: Request
+    # heavy-decode status is frozen at admission (predicted_hi is set
+    # before dispatch and never changes while running) so the monitor's
+    # load snapshot can count heavies in O(1) instead of rescanning
+    heavy: bool = False
+
     # pages currently held is tracked by the allocator; remaining below
     # is predicted remaining decode tokens (scheduler never sees truth)
     def predicted_remaining(self) -> int:
@@ -33,7 +38,17 @@ class RunningInfo:
         return max(1, hi - self.req.generated)
 
 
+HEAVY_THRESH = 128
+
+
 class DecodeScheduler:
+    """Incremental-bookkeeping invariants (fleet-scale hot path): the
+    batch context sum (``ctx_sum``) and heavy count are maintained on
+    admit/step/finish instead of rescanned per event.  Both are exact
+    integer mirrors of the scan they replace — ``generated`` only ever
+    mutates through ``step_token`` — so fixed-seed metrics are
+    byte-identical to the scanning implementation."""
+
     def __init__(self, allocator: PagedAllocator,
                  policy: str = "reserve-dynamic", max_batch: int = 64):
         assert policy in POLICIES, policy
@@ -42,6 +57,8 @@ class DecodeScheduler:
         self.max_batch = max_batch
         self.queue: List[Request] = []
         self.running: Dict[str, RunningInfo] = {}
+        self.ctx_sum = 0          # sum(prompt_len + generated) running
+        self._n_heavy = 0         # running requests with heavy decode
 
     # ------------------------------------------------------------------
     def enqueue(self, req: Request) -> None:
@@ -91,12 +108,20 @@ class DecodeScheduler:
         Returns newly admitted requests (caller materializes their KV)."""
         admitted: List[Request] = []
         remaining: List[Request] = []
-        for req in self.queue:
-            if (len(self.running) + len(admitted) < self.max_batch
-                    and self._admissible(req)
+        for i, req in enumerate(self.queue):
+            if len(self.running) + len(admitted) >= self.max_batch:
+                # batch full: no later candidate can be admitted, so the
+                # per-request policy checks would all be dead code —
+                # short-circuit the scan (identical admission outcome)
+                remaining.extend(self.queue[i:])
+                break
+            if (self._admissible(req)
                     and self.alloc.can_admit(req.prompt_len + 1)):
                 self.alloc.alloc(req.rid, req.prompt_len)
-                self.running[req.rid] = RunningInfo(req)
+                heavy = req.is_heavy_decode(HEAVY_THRESH)
+                self.running[req.rid] = RunningInfo(req, heavy=heavy)
+                self.ctx_sum += req.prompt_len + req.generated
+                self._n_heavy += heavy
                 admitted.append(req)
             else:
                 remaining.append(req)
@@ -109,11 +134,14 @@ class DecodeScheduler:
         scatters the token's K/V there)."""
         page = self.alloc.append_token(rid)
         self.running[rid].req.generated += 1
+        self.ctx_sum += 1
         return page
 
     def finish(self, rid: str) -> None:
         self.alloc.free(rid)
-        del self.running[rid]
+        ri = self.running.pop(rid)
+        self.ctx_sum -= ri.req.prompt_len + ri.req.generated
+        self._n_heavy -= ri.heavy
 
     def cancel(self, rid: str) -> bool:
         """User cancel: frees the pages of a running request, or drops a
@@ -126,9 +154,10 @@ class DecodeScheduler:
         return len(self.queue) < n
 
     # -- load snapshot for the cluster monitor --------------------------
-    def load(self, heavy_thresh: int = 128) -> dict:
-        heavy = sum(1 for ri in self.running.values()
-                    if ri.req.is_heavy_decode(heavy_thresh))
+    def load(self, heavy_thresh: int = HEAVY_THRESH) -> dict:
+        heavy = (self._n_heavy if heavy_thresh == HEAVY_THRESH
+                 else sum(1 for ri in self.running.values()
+                          if ri.req.is_heavy_decode(heavy_thresh)))
         return {
             "free_pages": self.alloc.free_pages,
             "n_heavy": heavy,

@@ -23,17 +23,24 @@ class PrefillScheduler:
         self.sched_batch = sched_batch
         self.raw: Deque[Request] = deque()
         self.scheduled: Deque[Request] = deque()
+        # incremental queued-token count: the cluster monitor and the
+        # global scheduler read this once per arrival/tick, which at
+        # fleet scale must not rescan the queue.  A request's
+        # contribution (prompt_len - prefilled) is fixed while it sits
+        # here — ``prefilled`` only mutates after ``next_batch`` pops it
+        # — so add/remove bookkeeping mirrors the scan exactly.
+        self._queued_tokens = 0
 
     def add(self, req: Request) -> None:
         self.raw.append(req)
+        self._queued_tokens += req.prompt_len - req.prefilled
 
     def __len__(self) -> int:
         return len(self.raw) + len(self.scheduled)
 
     @property
     def queued_tokens(self) -> int:
-        return sum(r.prompt_len - r.prefilled
-                   for r in list(self.raw) + list(self.scheduled))
+        return self._queued_tokens
 
     def _schedule_window(self) -> None:
         """Move up to sched_batch requests raw -> scheduled, sorted by
@@ -54,7 +61,9 @@ class PrefillScheduler:
             self._schedule_window()
         out: List[Request] = []
         while self.scheduled and len(out) < max_requests:
-            out.append(self.scheduled.popleft())
+            r = self.scheduled.popleft()
+            self._queued_tokens -= r.prompt_len - r.prefilled
+            out.append(r)
         return out
 
     def requeue_front(self, reqs: List[Request]) -> None:
@@ -62,11 +71,16 @@ class PrefillScheduler:
         their original order (engine backpressure, e.g. KV pages full)."""
         for r in reversed(reqs):
             self.scheduled.appendleft(r)
+            self._queued_tokens += r.prompt_len - r.prefilled
 
     def remove(self, rid: str) -> bool:
         """Drop a queued request (user cancel).  Returns whether it was
         still queued here (False once it moved on to the chunk queue)."""
         n = len(self)
+        for q in (self.raw, self.scheduled):
+            for r in q:
+                if r.rid == rid:
+                    self._queued_tokens -= r.prompt_len - r.prefilled
         self.raw = deque(r for r in self.raw if r.rid != rid)
         self.scheduled = deque(r for r in self.scheduled if r.rid != rid)
         return len(self) < n

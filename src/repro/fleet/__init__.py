@@ -1,0 +1,20 @@
+"""Fleet-scale trace-driven simulation harness (docs/fleet_sim.md).
+
+Drives ``Cluster(runtime="sim")`` with O(10^5)-O(10^6) requests over
+hundreds of instances in minutes, entirely JAX-free:
+
+* ``repro.fleet.traces``  — vectorized trace generation (Poisson /
+  bursty / diurnal arrivals, zipf tenants) + replayable trace files.
+* ``repro.fleet.harness`` — ``FleetSpec`` cluster presets and
+  ``run_fleet`` producing a ``FleetReport`` (TTFT/JCT/goodput + harness
+  throughput), with zero-page-leak verification.
+* ``repro.fleet.profile`` — per-event-kind event-loop profiler.
+"""
+from repro.fleet.harness import FleetReport, FleetSpec, page_leaks, run_fleet
+from repro.fleet.profile import EventLoopProfiler
+from repro.fleet.traces import Trace, generate_trace, load_trace
+
+__all__ = [
+    "EventLoopProfiler", "FleetReport", "FleetSpec", "Trace",
+    "generate_trace", "load_trace", "page_leaks", "run_fleet",
+]

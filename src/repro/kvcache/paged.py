@@ -166,13 +166,15 @@ class PagedAllocator:
         # at a page boundary the free and the grow can land on the same
         # call, and the freed page must be reusable for the grow so a
         # full pool never raises while net usage stays O(window)
-        self.trim(rid, ln)
-        if ln == len(self._tables[rid]) * self.page_size:
+        if self.window:
+            self.trim(rid, ln)
+        table = self._tables[rid]
+        if ln == len(table) * self.page_size:
             if not self._free:
                 raise OutOfPages(f"{rid}: decode append")
-            self._tables[rid].append(self._free.pop())
+            table.append(self._free.pop())
         self._lens[rid] = ln + 1
-        return self._tables[rid][ln // self.page_size]
+        return table[ln // self.page_size]
 
     def trim(self, rid: str, processed: int) -> int:
         """Free pages wholly outside the window of any query at position

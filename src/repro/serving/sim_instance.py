@@ -37,6 +37,11 @@ class SimInstance:
         self.cost = cost
         self.chunk_size = chunk_size
         self.co_run = co_run_predictor
+        # hot-path constants (cfg is frozen; chunk cost depends only on
+        # chunk_size + the co-run flag — same floats, computed once)
+        self._kv_per_tok = cfg.kv_bytes_per_token()
+        self._chunk_cost_s = (cost.prefill_time(chunk_size)
+                              * cost.predictor_overhead(co_run_predictor))
         self.flip = FlipMachine(role)
         # prefill facet
         self.psched = PrefillScheduler(sched_policy, sched_batch)
@@ -66,8 +71,7 @@ class SimInstance:
                 self.reqs[r.rid] = r
 
     def _chunk_cost(self) -> float:
-        return self.cost.prefill_time(self.chunk_size) \
-            * self.cost.predictor_overhead(self.co_run)
+        return self._chunk_cost_s
 
     def prefill_start(self, now: float) -> Optional[float]:
         if not self.chunks:
@@ -125,28 +129,24 @@ class SimInstance:
         swap_in = 0.0
         for r in admitted:
             if r.swapped:        # pay to bring the KV back (PCIe-class)
-                kvb = self.cfg.kv_bytes_per_token() \
-                    * (r.prompt_len + r.generated)
+                kvb = self._kv_per_tok * (r.prompt_len + r.generated)
                 swap_in += kvb / SWAP_BW
                 r.swapped = False
-        self.busy += swap_in
-        for rid in self.dsched.running:
-            r = self.dsched.running[rid].req
+            # a request only ever enters the running set through this
+            # admit, so stamping the newly admitted ones is identical
+            # to the old rescan of the whole batch for t_decode_start<0
             if r.t_decode_start < 0:
                 r.t_decode_start = now
                 r.phase = Phase.DECODE
-        if not self.dsched.running:
-            return None
+        self.busy += swap_in
         batch = len(self.dsched.running)
-        ctx = sum(ri.req.prompt_len + ri.req.generated
-                  for ri in self.dsched.running.values())
-        return self.cost.decode_time(batch, ctx) + swap_in
+        if not batch:
+            return None
+        return self.cost.decode_time(batch, self.dsched.ctx_sum) + swap_in
 
     def decode_complete(self, now: float) -> StepEvents:
         batch = len(self.dsched.running)
-        ctx = sum(ri.req.prompt_len + ri.req.generated
-                  for ri in self.dsched.running.values())
-        iter_time = self.cost.decode_time(batch, ctx)
+        iter_time = self.cost.decode_time(batch, self.dsched.ctx_sum)
         ev = StepEvents()
         for rid in list(self.dsched.running):
             req = self.dsched.running[rid].req
@@ -157,8 +157,7 @@ class SimInstance:
                 # penalty, requeue
                 self.swaps += 1
                 self.alloc.swap_events += 1
-                kvb = self.cfg.kv_bytes_per_token() \
-                    * (req.prompt_len + req.generated)
+                kvb = self._kv_per_tok * (req.prompt_len + req.generated)
                 self.busy += kvb / SWAP_BW
                 self.dsched.finish(rid)          # frees pages
                 req.phase = Phase.DECODE_QUEUED

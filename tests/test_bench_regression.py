@@ -1,0 +1,106 @@
+"""Perf-gate checker unit tests (tools/check_bench_regression.py):
+red on an injected 20% latency regression, red on a missing metric
+key, green within tolerance — the bench-smoke gate must actually
+gate."""
+import importlib.util
+import json
+import pathlib
+
+_TOOL = pathlib.Path(__file__).resolve().parent.parent \
+    / "tools" / "check_bench_regression.py"
+_spec = importlib.util.spec_from_file_location("check_bench_regression",
+                                               _TOOL)
+checker = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(checker)
+
+METRICS = {
+    "diurnal.report.avg_jct": {"baseline": 10.0, "tolerance": 0.02,
+                               "direction": "lower"},
+    "diurnal.report.events_per_s": {"baseline": 15000.0,
+                                    "tolerance": 0.5,
+                                    "direction": "higher"},
+}
+
+
+def _report(avg_jct=10.0, events_per_s=15000.0):
+    return {"diurnal": {"report": {"avg_jct": avg_jct,
+                                   "events_per_s": events_per_s}}}
+
+
+def _statuses(rows):
+    return {r["metric"]: r["status"] for r in rows}
+
+
+def test_green_within_tolerance():
+    rows = checker.check_family(_report(avg_jct=10.1,
+                                        events_per_s=9000.0), METRICS)
+    assert set(_statuses(rows).values()) == {"ok"}
+
+
+def test_red_on_20pct_latency_regression():
+    rows = checker.check_family(_report(avg_jct=12.0), METRICS)
+    st = _statuses(rows)
+    assert st["diurnal.report.avg_jct"] == "regressed"
+    assert st["diurnal.report.events_per_s"] == "ok"
+
+
+def test_red_on_throughput_collapse():
+    rows = checker.check_family(_report(events_per_s=3000.0), METRICS)
+    assert _statuses(rows)["diurnal.report.events_per_s"] == "regressed"
+
+
+def test_red_on_missing_metric_key():
+    rows = checker.check_family({"diurnal": {"report": {
+        "events_per_s": 15000.0}}}, METRICS)
+    assert _statuses(rows)["diurnal.report.avg_jct"] == "missing"
+
+
+def test_improvement_never_fails():
+    rows = checker.check_family(_report(avg_jct=5.0,
+                                        events_per_s=60000.0), METRICS)
+    assert set(_statuses(rows).values()) == {"improved"}
+
+
+def test_lookup_list_indices():
+    rep = {"bandwidth": {"sweep": [{"x": 1.0}, {"x": 2.0}]}}
+    assert checker.lookup(rep, "bandwidth.sweep.1.x") == 2.0
+    assert checker.lookup(rep, "bandwidth.sweep.7.x") is None
+    assert checker.lookup(rep, "bandwidth.sweep.one.x") is None
+    assert checker.lookup(rep, "bandwidth.missing") is None
+
+
+def test_main_exit_codes(tmp_path):
+    baselines = {"fam": {"file": "BENCH_fam.json", "metrics": METRICS}}
+    bpath = tmp_path / "baselines.json"
+    bpath.write_text(json.dumps(baselines))
+
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_report()))
+    assert checker.main(["--baselines", str(bpath),
+                         "--bench", f"fam={good}"]) == 0
+
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_report(avg_jct=12.0)))
+    assert checker.main(["--baselines", str(bpath),
+                         "--bench", f"fam={bad}"]) == 1
+
+    # unknown family and unreadable report both fail
+    assert checker.main(["--baselines", str(bpath),
+                         "--bench", f"nope={good}"]) == 1
+    assert checker.main(["--baselines", str(bpath),
+                         "--bench", f"fam={tmp_path / 'absent.json'}"]) \
+        == 1
+    # no --bench at all is a usage error
+    assert checker.main(["--baselines", str(bpath)]) == 2
+
+
+def test_committed_baselines_parse_and_cover_both_families():
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    with open(repo / "benchmarks" / "baselines.json") as f:
+        baselines = json.load(f)
+    for family in ("fleet", "paged_serving"):
+        assert family in baselines
+        for key, spec in baselines[family]["metrics"].items():
+            assert spec["direction"] in ("lower", "higher"), key
+            assert 0 < spec["tolerance"] <= 1 or key.endswith("wall_s"), \
+                key

@@ -1,0 +1,168 @@
+#!/usr/bin/env python
+"""Gate the perf trajectory: fresh BENCH_*.json vs committed baselines.
+
+``benchmarks/baselines.json`` pins, per benchmark family, a set of
+metrics with per-metric tolerances:
+
+    {
+      "fleet": {
+        "file": "BENCH_fleet.json",
+        "metrics": {
+          "diurnal.report.avg_jct":      {"baseline": 10.21,
+                                          "tolerance": 0.02,
+                                          "direction": "lower"},
+          "diurnal.report.events_per_s": {"baseline": 14700,
+                                          "tolerance": 0.60,
+                                          "direction": "higher"}
+        }
+      }
+    }
+
+Metric keys are dotted paths into the bench JSON (list indices are
+numeric path segments, e.g. ``bandwidth.sweep.2.avg_transfer``).
+``direction`` says which way is BETTER ("lower" for latency, "higher"
+for throughput); ``tolerance`` is the allowed relative regression
+(0.02 = 2% worse than baseline fails).  Fixed-seed sim-time metrics
+are deterministic and get tight tolerances; wall-clock metrics are
+machine-dependent and get loose ones.
+
+A missing metric key in the fresh report is a FAILURE (a renamed or
+dropped metric must be a conscious baseline edit), as is a missing
+bench file for a family selected via --bench.  Improvements beyond
+tolerance never fail — they print in the delta table as a hint to
+ratchet the baseline.
+
+    python tools/check_bench_regression.py \\
+        --baselines benchmarks/baselines.json \\
+        --bench fleet=BENCH_fleet.json \\
+        --bench paged_serving=BENCH_paged_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def lookup(report: dict, dotted: str):
+    """Resolve a dotted path ('a.b.0.c') in nested dicts/lists.
+    Returns None when any segment is missing."""
+    node = report
+    for seg in dotted.split("."):
+        if isinstance(node, list):
+            try:
+                node = node[int(seg)]
+            except (ValueError, IndexError):
+                return None
+        elif isinstance(node, dict):
+            if seg not in node:
+                return None
+            node = node[seg]
+        else:
+            return None
+    return node
+
+
+def check_metric(value: Optional[float], spec: dict) -> Tuple[str, float]:
+    """One metric verdict: (status, relative_delta).
+
+    status in {"ok", "improved", "regressed", "missing"}; delta is the
+    signed relative change where POSITIVE means worse (regression
+    direction), so the table reads uniformly.
+    """
+    if value is None or not isinstance(value, (int, float)):
+        return "missing", 0.0
+    base = float(spec["baseline"])
+    tol = float(spec["tolerance"])
+    direction = spec.get("direction", "lower")
+    if base == 0.0:
+        # degenerate baseline: any nonzero value of a lower-is-better
+        # metric is treated as a regression beyond tolerance
+        worse = float(value) if direction == "lower" else -float(value)
+    else:
+        rel = (float(value) - base) / abs(base)
+        worse = rel if direction == "lower" else -rel
+    if worse > tol:
+        return "regressed", worse
+    if worse < -tol:
+        return "improved", worse
+    return "ok", worse
+
+
+def check_family(report: dict, metrics: Dict[str, dict]) -> List[dict]:
+    rows = []
+    for key, spec in sorted(metrics.items()):
+        value = lookup(report, key)
+        status, worse = check_metric(value, spec)
+        rows.append({
+            "metric": key, "status": status,
+            "value": value, "baseline": spec["baseline"],
+            "worse_by": worse, "tolerance": spec["tolerance"],
+            "direction": spec.get("direction", "lower"),
+        })
+    return rows
+
+
+def format_table(family: str, rows: List[dict]) -> str:
+    lines = [f"== {family} ==",
+             f"{'metric':52s} {'baseline':>12s} {'value':>12s} "
+             f"{'delta':>8s} {'tol':>6s}  status"]
+    for r in rows:
+        val = "MISSING" if r["value"] is None \
+            else f"{r['value']:12.4f}"
+        delta = f"{100 * r['worse_by']:+7.1f}%"
+        mark = {"ok": "ok", "improved": "ok (improved)",
+                "regressed": "REGRESSED", "missing": "MISSING KEY"}
+        lines.append(f"{r['metric']:52s} {r['baseline']:12.4f} "
+                     f"{val:>12s} {delta:>8s} "
+                     f"{100 * r['tolerance']:5.0f}%  {mark[r['status']]}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baselines", default="benchmarks/baselines.json")
+    ap.add_argument("--bench", action="append", default=[],
+                    metavar="FAMILY=PATH",
+                    help="fresh bench report for a family; repeatable")
+    args = ap.parse_args(argv)
+
+    with open(args.baselines) as f:
+        baselines = json.load(f)
+
+    failures = 0
+    checked = 0
+    for pair in args.bench:
+        family, _, path = pair.partition("=")
+        if family not in baselines:
+            print(f"ERROR: family {family!r} not in {args.baselines}")
+            failures += 1
+            continue
+        try:
+            with open(path) as f:
+                report = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"ERROR: cannot read bench report {path}: {e}")
+            failures += 1
+            continue
+        rows = check_family(report, baselines[family]["metrics"])
+        print(format_table(family, rows))
+        print()
+        checked += len(rows)
+        failures += sum(r["status"] in ("regressed", "missing")
+                        for r in rows)
+
+    if not args.bench:
+        print("ERROR: no --bench FAMILY=PATH given")
+        return 2
+    if failures:
+        print(f"FAIL: {failures} metric(s) regressed or missing "
+              f"(of {checked} checked)")
+        return 1
+    print(f"OK: {checked} metric(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
