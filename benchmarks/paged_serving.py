@@ -48,17 +48,23 @@ from repro.configs import get_smoke_config
 from repro.core.decode_engine import DecodeEngine
 from repro.core.kv_transfer import NetworkStack
 from repro.core.prefill_engine import PrefillEngine
+from repro.core.sched.prefill_scheduler import PrefillScheduler
 from repro.models import model as M
 from repro.runtime.workload import generate
 
 
-def _serve(cfg, params, reqs, backend):
+def _serve(cfg, params, reqs, backend, *, prefix_cache=False,
+           sched_batch=None):
     net = NetworkStack()
+    sched = (PrefillScheduler("sjf", sched_batch)
+             if sched_batch is not None else None)
     pe = PrefillEngine("p0", cfg, params, chunk_size=16, max_seq=64,
                        backend=backend, network=net, page_size=8,
-                       n_pages=256)
+                       n_pages=256, prefix_cache=prefix_cache,
+                       scheduler=sched)
     de = DecodeEngine("d0", cfg, params, max_slots=8, max_seq=64,
-                      backend=backend, page_size=8, n_pages=256)
+                      backend=backend, page_size=8, n_pages=256,
+                      prefix_cache=prefix_cache)
     for r in reqs:
         pe.submit(r)
     out, t = {}, 0.0
@@ -75,7 +81,7 @@ def _serve(cfg, params, reqs, backend):
     assert pe.idle() and de.idle(), "serve loop did not drain"
     wall = time.perf_counter() - t0
     toks = sum(len(v) for v in out.values())
-    return {
+    res = {
         "backend": backend,
         "wall_s": round(wall, 4),
         "requests": len(out),
@@ -86,6 +92,58 @@ def _serve(cfg, params, reqs, backend):
         "decode_iterations": de.iterations,
         "kv_bytes_sent": net.bytes_sent,
         "outputs_digest": sorted((k, tuple(v)) for k, v in out.items()),
+    }
+    if prefix_cache:
+        res["cache_hit_rate"] = round(pe.alloc.cache_hit_rate, 4)
+        res["kv_bytes_saved"] = net.bytes_saved
+        res["pages_saved"] = sum(r.cached_prefix_pages for r in reqs)
+    return res
+
+
+def _serve_prefix_cache():
+    """The prefix-cache trajectory anchor (docs/prefix_cache.md): the
+    SAME zipf-shared system-prompt workload (pool of 2 templates, 32
+    shared leading tokens) through the paged engines twice — cache off
+    vs on.  Virtual-time TTFT, prefill chunk count and KV wire bytes
+    quantify what aliasing the shared pages saves; the emitted tokens
+    must be identical (the cache is a pure dedup, never a recompute)."""
+    cfg = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                              dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = generate("Mixed", 8, seed=11, max_prompt=48, max_decode=6,
+                    vocab_size=cfg.vocab_size, prefix_pool=2,
+                    prefix_len=32, prefix_zipf=1.2)
+    # small prefill waves (sched_batch=2): the cache only serves pages
+    # whose content is FINAL (committed at prefill finish), so sharing
+    # happens across waves — the first sharer in a wave seeds the cache
+    # the next waves alias (multi-wave traffic, the steady-state shape)
+    off_reqs = copy.deepcopy(reqs)
+    on_reqs = copy.deepcopy(reqs)
+    off = _serve(cfg, params, off_reqs, "paged", sched_batch=2)
+    on = _serve(cfg, params, on_reqs, "paged", prefix_cache=True,
+                sched_batch=2)
+    identical = off.pop("outputs_digest") == on.pop("outputs_digest")
+    assert identical, "prefix cache changed emitted tokens"
+
+    def _avg_ttft(rs):
+        done = [r for r in rs if r.t_first_token >= 0]
+        return round(sum(r.t_first_token - r.arrival
+                         for r in done) / max(1, len(done)), 4)
+
+    off_ttft, on_ttft = _avg_ttft(off_reqs), _avg_ttft(on_reqs)
+    return {
+        "model": cfg.name,
+        "workload": "Mixed8 zipf prefixes (pool=2, len=32, s=1.2)",
+        "off": off,
+        "on": on,
+        "token_identical": identical,
+        "cache_hit_rate": on["cache_hit_rate"],
+        "avg_ttft_off": off_ttft,
+        "avg_ttft_on": on_ttft,
+        "ttft_ratio": round(on_ttft / max(1e-9, off_ttft), 4),
+        "kv_bytes_ratio": round(
+            on["kv_bytes_sent"] / max(1, off["kv_bytes_sent"]), 4),
+        "chunks_saved": off["prefill_chunks"] - on["prefill_chunks"],
     }
 
 
@@ -191,8 +249,8 @@ def run(out_path=None, scenarios=None):
     rows = []
     all_scenarios = _scenarios()
     if scenarios:
-        known = {name for name, *_ in all_scenarios} | {"cluster",
-                                                        "chaos"}
+        known = {name for name, *_ in all_scenarios} | {
+            "cluster", "chaos", "prefix_cache"}
         unknown = set(scenarios) - known
         if unknown:
             raise SystemExit(f"unknown scenarios {sorted(unknown)}; "
@@ -255,6 +313,16 @@ def run(out_path=None, scenarios=None):
                      f"identical={identical}"))
         assert identical is not False, \
             "cluster serving changed emitted tokens vs single engine"
+    if not scenarios or "prefix_cache" in scenarios:
+        pres = _serve_prefix_cache()
+        report["prefix_cache"] = pres
+        rows.append(("paged_serving_prefix_cache",
+                     pres["on"]["wall_s"] * 1e6
+                     / max(1, pres["on"]["decode_iterations"]),
+                     f"hit_rate={pres['cache_hit_rate']};"
+                     f"ttft_ratio={pres['ttft_ratio']};"
+                     f"kv_bytes_ratio={pres['kv_bytes_ratio']};"
+                     f"chunks_saved={pres['chunks_saved']}"))
     if not scenarios or "chaos" in scenarios:
         cres = _serve_chaos()
         report["chaos"] = cres

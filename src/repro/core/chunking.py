@@ -9,7 +9,7 @@ prefill progress ("last prefilled token position", §3.3.3).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 DEFAULT_CHUNK_SIZE = 512  # accelerator-saturate threshold for OPT-13B (§2.1)
 
@@ -35,11 +35,19 @@ class Chunk:
 
 
 def partition(scheduled: Sequence[Tuple[str, int]],
-              chunk_size: int = DEFAULT_CHUNK_SIZE) -> List[Chunk]:
+              chunk_size: int = DEFAULT_CHUNK_SIZE,
+              starts: Optional[Dict[str, int]] = None) -> List[Chunk]:
     """scheduled: ordered (rid, prompt_len) pairs -> list of Chunks.
 
+    ``starts`` maps rid -> first prompt-token index to prefill (default
+    0): the prefix cache skips a request's cached leading pages, so its
+    segments begin at ``starts[rid]`` and only the uncached suffix is
+    chunked (``req_start`` stays an absolute prompt position — the KV
+    write/attention arithmetic is unchanged).
+
     Invariants (property-tested):
-      * token conservation: sum of segment lengths == sum of prompt lens
+      * token conservation: sum of segment lengths == sum of
+        (prompt_len - start)
       * order preservation: segments appear in scheduling order, and a
         request's slices are contiguous and in order
       * every chunk except possibly the last is exactly chunk_size full
@@ -50,7 +58,7 @@ def partition(scheduled: Sequence[Tuple[str, int]],
     fill = 0
     ci = 0
     for rid, plen in scheduled:
-        done = 0
+        done = min(starts.get(rid, 0), plen) if starts else 0
         while done < plen:
             take = min(plen - done, chunk_size - fill)
             segs.append(Segment(rid=rid, req_start=done, chunk_start=fill,

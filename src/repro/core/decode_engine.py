@@ -54,7 +54,7 @@ class DecodeEngine:
                  max_slots: int = 8, max_seq: int = 512,
                  policy: str = "reserve-dynamic",
                  n_pages: int = 512, page_size: int = 16,
-                 backend: str = "auto"):
+                 backend: str = "auto", prefix_cache: bool = False):
         self.iid = iid
         self.cfg = cfg
         self.params = params
@@ -63,11 +63,15 @@ class DecodeEngine:
         self.spec = backend_for(cfg, backend)
         self.backend = self.spec.backend
         self.enc_ctx = self.spec.cross_ctx
+        # same gating as the prefill side: stable page content + paged
+        self.prefix_cache = (prefix_cache and self.backend == "paged"
+                             and not cfg.sliding_window)
         self.alloc = PagedAllocator(
             n_pages=n_pages, page_size=page_size,
             window=cfg.sliding_window,
             cross_tokens=self.enc_ctx if self.spec.cross == "pages"
-            else 0)
+            else 0,
+            prefix_cache=self.prefix_cache)
         self.scheduler = DecodeScheduler(self.alloc, policy=policy,
                                          max_batch=max_slots)
         self.page_size = page_size
@@ -151,20 +155,35 @@ class DecodeEngine:
                     pk.pages_k.shape[1] == len(live), \
                     "paged decode engine needs a page-granular payload " \
                     "from a paged prefill engine with the same page_size"
-                pages.extend(live)
-                payload_k.append(pk.pages_k)
-                payload_v.append(pk.pages_v)
+                # prefix-cache hits were aliased by the admission alloc:
+                # their contents are already in this pool (written when
+                # the cache entry's original request installed them), so
+                # only the fresh suffix pages take the payload
+                hit = self.alloc.cached_prefix_pages(req.rid)
+                if hit:
+                    pages.extend(live[hit:])
+                    if hit < len(live):
+                        payload_k.append(pk.pages_k[:, hit:])
+                        payload_v.append(pk.pages_v[:, hit:])
+                else:
+                    pages.extend(live)
+                    payload_k.append(pk.pages_k)
+                    payload_v.append(pk.pages_v)
                 if self.spec.cross == "pages":
                     # the one-shot cross payload lands in the cross
                     # pages the admission alloc drew from the same pool
+                    # — unless the alloc deduped them against another
+                    # resident request's encoder pages
                     ctab = self.alloc.cross_table(req.rid)
                     assert pk.cross_k is not None and \
                         pk.cross_k.shape[1] == len(ctab), \
                         "cross-attention arch needs the encoder pages " \
                         "shipped alongside the self KV"
-                    pages.extend(ctab)
-                    payload_k.append(pk.cross_k)
-                    payload_v.append(pk.cross_v)
+                    if not self.alloc.cross_cached(req.rid):
+                        pages.extend(ctab)
+                        payload_k.append(pk.cross_k)
+                        payload_v.append(pk.cross_v)
+                        self.alloc.commit_cross(req.rid)
             else:
                 self.cache = M.cache_insert(self.cache, pk.cache, slot)
             self.slots[slot] = SlotState(req=req,
@@ -266,6 +285,13 @@ class DecodeEngine:
                 ctab = self.alloc.cross_table(st.req.rid)
                 cbt[s, :len(ctab)] = ctab
                 clens[s] = self.enc_ctx
+        # copy-on-write: step_token may have redirected a slot's tail
+        # page off a shared page — replay the page copies on the device
+        # pool BEFORE the kernels scatter this iteration's tokens
+        cows = self.alloc.take_cow_copies()
+        if cows:
+            src, dst = zip(*cows)
+            self.pool = self.pool.copy_pages(list(src), list(dst))
         if cross:
             nxt, kp, vp = self._decode_paged(
                 self.params, jnp.asarray(toks), jnp.asarray(pos),

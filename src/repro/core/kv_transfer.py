@@ -53,7 +53,8 @@ TS_ICI = LinkSpec(LinkType.DIRECT, 50e9, 5e-6, True)
 
 
 def kv_page_bytes(cfg: ModelConfig, n_tokens: int, page_size: int,
-                  dtype_bytes: int = 2, enc_len: int = 0) -> int:
+                  dtype_bytes: int = 2, enc_len: int = 0,
+                  cached_tokens: int = 0, cross_cached: bool = False) -> int:
     """Prefilled-KV payload at PAGE granularity: the paged engines ship
     whole LIVE pages, so the wire bytes are the page contents, not the
     raw token count — this is the unit the paper's per-chunk streamed
@@ -65,15 +66,22 @@ def kv_page_bytes(cfg: ModelConfig, n_tokens: int, page_size: int,
     ``enc_len > 0`` (VLM / enc-dec archs) adds the ONE-SHOT cross-KV
     payload: the read-only encoder pages every cross layer attends,
     shipped once with the prefilled self KV and amortized over the whole
-    decode (the paper's prefill→decode shipping model)."""
+    decode (the paper's prefill→decode shipping model).
+
+    ``cached_tokens`` (page-aligned) and ``cross_cached`` subtract what
+    the prefix cache already deduped: pages the decode side aliases from
+    its own cache never go on the wire (content-addressed KV — both
+    sides key pages by the same chain hash, so a prefill-side hit is a
+    decode-side hit for any previously decoded sharer)."""
     n = max(1, n_tokens)
     pages = -(-n // page_size)
     # same dead-page arithmetic the allocator frees by; at least one
     # live page always ships (the allocator clamps identically)
     pages = max(1, pages - window_dead_pages(n, cfg.sliding_window,
                                              page_size))
+    pages = max(1, pages - cached_tokens // page_size)
     total = kv_bytes(cfg, pages * page_size, dtype_bytes)
-    if enc_len:
+    if enc_len and not cross_cached:
         cross_pages = -(-enc_len // page_size)
         total += (cross_pages * page_size
                   * cfg.cross_kv_bytes_per_token(dtype_bytes))
@@ -81,10 +89,13 @@ def kv_page_bytes(cfg: ModelConfig, n_tokens: int, page_size: int,
 
 
 def kv_bytes(cfg: ModelConfig, n_tokens: int, dtype_bytes: int = 2,
-             enc_len: int = 0) -> int:
+             enc_len: int = 0, cached_tokens: int = 0) -> int:
     """Prefilled-KV payload for n_tokens. MLA ships the compressed latent;
     recurrent blocks ship O(1) state (counted once, not per token);
-    ``enc_len`` encoder tokens add the one-shot cross-KV payload."""
+    ``enc_len`` encoder tokens add the one-shot cross-KV payload;
+    ``cached_tokens`` are deduped by the prefix cache and stay off the
+    wire (token-granular analogue of ``kv_page_bytes``)."""
+    n_tokens = max(0, n_tokens - cached_tokens)
     per_tok = cfg.kv_bytes_per_token(dtype_bytes)
     state_bytes = 0
     for kind in cfg.layer_kinds:
@@ -114,6 +125,7 @@ class NetworkStack:
         self.spec = spec
         self.granularity = granularity
         self.bytes_sent = 0
+        self.bytes_saved = 0   # wire bytes the prefix cache deduped
         self.transfers = 0
         self.retransmits = 0
 
@@ -133,17 +145,31 @@ class NetworkStack:
 
     def send_kv(self, cfg: ModelConfig, n_tokens: int,
                 n_chunks: int = 1, page_size: int = 0,
-                enc_len: int = 0) -> float:
+                enc_len: int = 0, cached_tokens: int = 0,
+                cross_cached: bool = False) -> float:
         """Returns emulated completion delay (s) for a prefilled KV.
 
         ``page_size > 0`` models the paged engines' transfer: payload =
         live pages (page-aligned), which is what a one-sided page put
         actually moves.  ``enc_len > 0`` adds the one-shot cross-KV
-        pages (VLM / enc-dec).  chunk-level granularity pays setup per
+        pages (VLM / enc-dec).  ``cached_tokens``/``cross_cached`` keep
+        prefix-cache-deduped pages off the wire (and count the savings
+        in ``bytes_saved``).  chunk-level granularity pays setup per
         chunk but overlaps with prefill of later chunks: only the LAST
         chunk's latency lands on the critical path."""
-        total = (kv_page_bytes(cfg, n_tokens, page_size, enc_len=enc_len)
-                 if page_size else kv_bytes(cfg, n_tokens, enc_len=enc_len))
+        if page_size:
+            total = kv_page_bytes(cfg, n_tokens, page_size, enc_len=enc_len,
+                                  cached_tokens=cached_tokens,
+                                  cross_cached=cross_cached)
+            if cached_tokens or cross_cached:
+                self.bytes_saved += kv_page_bytes(
+                    cfg, n_tokens, page_size, enc_len=enc_len) - total
+        else:
+            total = kv_bytes(cfg, n_tokens, enc_len=enc_len,
+                             cached_tokens=cached_tokens)
+            if cached_tokens:
+                self.bytes_saved += kv_bytes(cfg, n_tokens,
+                                             enc_len=enc_len) - total
         self.bytes_sent += total
         if self.granularity == "chunk" and n_chunks > 1:
             self.transfers += n_chunks

@@ -37,7 +37,8 @@ from repro.core.backend import backend_for
 from repro.core.kv_transfer import NetworkStack
 from repro.core.sched.dispatcher import Dispatcher
 from repro.core.sched.prefill_scheduler import PrefillScheduler
-from repro.kvcache.paged import OutOfPages, PagedAllocator, PagePool
+from repro.kvcache.paged import (OutOfPages, PagedAllocator, PagePool,
+                                 request_cross_key, request_page_keys)
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.runtime.request import Phase, Request
@@ -69,6 +70,11 @@ class PrefilledKV:
     cross_k: object = None       # paged cross-attention archs only
     cross_v: object = None
     enc_len: int = 0
+    # prefix-cache accounting: leading prompt tokens whose pages the
+    # prefill side aliased (skipped recompute + wire bytes), and whether
+    # the cross pages were deduped (encoder ran 0 times for this req)
+    cached_tokens: int = 0
+    cross_cached: bool = False
 
 
 def _pow2(n: int) -> int:
@@ -101,11 +107,16 @@ class PrefillEngine:
                  predictor=None,
                  chunk_size: int = 64, max_seq: int = 512,
                  backend: str = "auto",
-                 n_pages: int = 512, page_size: int = 16):
+                 n_pages: int = 512, page_size: int = 16,
+                 prefix_cache: bool = False):
         self.iid = iid
         self.cfg = cfg
         self.params = params
-        self.scheduler = scheduler or PrefillScheduler()
+        # explicit None check: an EMPTY scheduler is falsy (__len__), so
+        # `scheduler or ...` would silently discard a caller's policy/
+        # batch-window configuration
+        self.scheduler = scheduler if scheduler is not None \
+            else PrefillScheduler()
         self.dispatcher = dispatcher or Dispatcher()
         self.network = network or NetworkStack()
         self.predictor = predictor
@@ -118,14 +129,21 @@ class PrefillEngine:
         self._reqs: Dict[str, Request] = {}
         self.chunk_steps = 0         # steps that actually ran a chunk
         self.fused_calls = 0         # one per chunk on the paged backend
+        self.encoder_calls = 0       # chunks that ran encoder + scatter
         self.enc_ctx = self.spec.cross_ctx
+        # prefix cache needs stable page content (no sliding-window
+        # trims) and the paged pool; silently a no-op elsewhere
+        self.prefix_cache = (prefix_cache and self.backend == "paged"
+                             and not cfg.sliding_window)
+        self._page_keys: Dict[str, List[bytes]] = {}
 
         if self.backend == "paged":
             self.alloc = PagedAllocator(
                 n_pages=n_pages, page_size=page_size,
                 window=cfg.sliding_window,
                 cross_tokens=self.enc_ctx if self.spec.cross == "pages"
-                else 0)
+                else 0,
+                prefix_cache=self.prefix_cache)
             self.pool, self._trash = make_page_pool(cfg, n_pages,
                                                     page_size)
             self._bt_width = self.alloc.pages_for(max_seq)
@@ -138,6 +156,20 @@ class PrefillEngine:
                     return M.prefill_paged(params, cfg, toks, qoff,
                                            kvlen, last, bt, pg, off, kp,
                                            vp, enc, cbt, clen, cpg, coff)
+
+                # read-only cross variant for chunks with NO encoder
+                # work (no segment is a first chunk with unwritten cross
+                # pages): skips the O(enc_ctx²) encoder stack + scatter
+                # that the one-shot path used to rerun and discard every
+                # chunk
+                def _prefill_paged_ro(params, toks, qoff, kvlen, last,
+                                      bt, pg, off, kp, vp, cbt, clen):
+                    return M.prefill_paged(params, cfg, toks, qoff,
+                                           kvlen, last, bt, pg, off, kp,
+                                           vp, None, cbt, clen, None,
+                                           None)
+                self._prefill_paged_ro = jax.jit(_prefill_paged_ro,
+                                                 donate_argnums=(8, 9))
             else:
                 def _prefill_paged(params, toks, qoff, kvlen, last, bt,
                                    pg, off, kp, vp):
@@ -200,6 +232,7 @@ class PrefillEngine:
                 self.alloc.free(rid)
         else:
             self._caches.pop(rid, None)
+        self._page_keys.pop(rid, None)
         return True
 
     # ------------------------------------------------------------------
@@ -216,10 +249,29 @@ class PrefillEngine:
             # instead of an OutOfPages crash mid-batch
             fit, defer = [], []
             for r in batch:
+                keys = cross_key = None
+                if self.prefix_cache:
+                    # cap aliasing at the last FULL page strictly before
+                    # the final prompt token: the last token is always
+                    # recomputed so the finished request still emits its
+                    # first-token logits
+                    full = request_page_keys(r, self.page_size) or []
+                    self._page_keys[r.rid] = full
+                    keys = full[:max(0, (r.prompt_len - 1)
+                                     // self.page_size)]
+                    if self.spec.cross == "pages":
+                        cross_key = request_cross_key(r)
                 if self.alloc.can_admit(r.prompt_len,
-                                        materialize_all=True):
+                                        materialize_all=True,
+                                        page_keys=keys,
+                                        cross_key=cross_key):
                     self.alloc.alloc(r.rid, r.prompt_len,
-                                     materialize_all=True)
+                                     materialize_all=True,
+                                     page_keys=keys, cross_key=cross_key)
+                    r.cached_prefix_pages = \
+                        self.alloc.cached_prefix_pages(r.rid)
+                    r.cached_prefix_tokens = \
+                        self.alloc.cached_prefix_tokens(r.rid)
                     fit.append(r)
                 else:
                     if self.alloc.pages_for(max(1, r.prompt_len)) \
@@ -238,7 +290,12 @@ class PrefillEngine:
                 self._caches[r.rid] = M.init_cache(self.cfg, 1,
                                                    self.max_seq)
         pairs = [(r.rid, r.prompt_len) for r in batch]
-        self._chunk_queue.extend(chunking.partition(pairs, self.chunk_size))
+        # cached-prefix pages are skipped, not recomputed: each request's
+        # segments start at its first uncached token
+        starts = {r.rid: r.cached_prefix_tokens for r in batch
+                  if r.cached_prefix_tokens}
+        self._chunk_queue.extend(chunking.partition(
+            pairs, self.chunk_size, starts=starts or None))
         for r in batch:
             r.phase = Phase.PREFILL
 
@@ -273,6 +330,7 @@ class PrefillEngine:
         pg = np.full((ns, sq), trash, np.int32)
         off = np.tile(np.arange(sq, dtype=np.int32) % ps, (ns, 1))
         cross = self.spec.cross == "pages"
+        scattered: List[str] = []   # rids whose cross pages land this call
         if cross:
             ec = self.enc_ctx
             enc = np.zeros((ns, ec, self.cfg.d_model), np.float32)
@@ -301,22 +359,35 @@ class PrefillEngine:
                                   np.int32)
                 cbt[i, :len(ctab)] = ctab
                 clen[i] = self.enc_ctx
-                if seg.req_start == 0:
+                if (seg.req_start == self.alloc.cached_prefix_tokens(
+                        seg.rid)
+                        and not self.alloc.cross_cached(seg.rid)):
                     # one-shot cross-KV prefill: only a request's FIRST
-                    # segment scatters the encoder K/V into its cross
-                    # pages — later chunks only read them (cpg stays at
-                    # the scratch page, making the write a no-op)
+                    # segment (which starts right after any cached
+                    # prefix) scatters the encoder K/V into its cross
+                    # pages — later chunks only read them, and cache-hit
+                    # requests alias pages another request already wrote
+                    # (cpg stays at the scratch page: write is a no-op)
                     if req.enc_embeds is not None:
                         enc[i] = req.enc_embeds
                     epos = np.arange(self.enc_ctx)
                     cpg[i] = ctab[epos // ps]
-        if cross:
+                    scattered.append(seg.rid)
+        if cross and scattered:
             next_tok, _, kp, vp = self._prefill_paged(
                 self.params, jnp.asarray(toks), jnp.asarray(qoff),
                 jnp.asarray(kvlen), jnp.asarray(last), jnp.asarray(bt),
                 jnp.asarray(pg), jnp.asarray(off), self.pool.k,
                 self.pool.v, jnp.asarray(enc), jnp.asarray(cbt),
                 jnp.asarray(clen), jnp.asarray(cpg), jnp.asarray(coff))
+            self.encoder_calls += 1
+        elif cross:
+            # no segment needs encoder work: read-only cross chunk
+            next_tok, _, kp, vp = self._prefill_paged_ro(
+                self.params, jnp.asarray(toks), jnp.asarray(qoff),
+                jnp.asarray(kvlen), jnp.asarray(last), jnp.asarray(bt),
+                jnp.asarray(pg), jnp.asarray(off), self.pool.k,
+                self.pool.v, jnp.asarray(cbt), jnp.asarray(clen))
         else:
             next_tok, _, kp, vp = self._prefill_paged(
                 self.params, jnp.asarray(toks), jnp.asarray(qoff),
@@ -325,6 +396,10 @@ class PrefillEngine:
                 self.pool.v)
         self.pool = PagePool(k=kp, v=vp)
         self.fused_calls += 1
+        for rid in scattered:
+            # cross pages now hold real encoder K/V: publish them so
+            # later requests with the same encoder input alias them
+            self.alloc.commit_cross(rid)
         next_tok = np.asarray(next_tok)
         finished: List[PrefilledKV] = []
         for i, seg in enumerate(segs):
@@ -342,20 +417,32 @@ class PrefillEngine:
                       ) -> PrefilledKV:
         n_chunks = self._note_finished(req, now)
         enc_len = self.enc_ctx if self.spec.cross == "pages" else 0
+        cross_cached = self.alloc.cross_cached(req.rid)
         delay = self.network.send_kv(self.cfg, req.prompt_len,
                                      n_chunks=n_chunks,
                                      page_size=self.page_size,
-                                     enc_len=enc_len)
+                                     enc_len=enc_len,
+                                     cached_tokens=req.cached_prefix_tokens,
+                                     cross_cached=cross_cached)
         req.phase = Phase.TRANSFER
         # ship the LIVE pages only: for windowed configs that is the
         # O(window) in-window suffix, exactly what the decode side's
-        # window-aware allocator will hold for this request
+        # window-aware allocator will hold for this request.  The
+        # payload still CARRIES any cached-prefix pages (they are live
+        # aliases in this pool) so a decode side without those cache
+        # entries stays correct; the wire accounting above subtracts
+        # them (content-addressed store assumption, docs/prefix_cache.md)
         pages_k, pages_v = self.pool.gather(self.alloc.live_pages(req.rid))
         cross_k = cross_v = None
         if enc_len:
             # plus the one-shot read-only cross pages (encoder K/V)
             cross_k, cross_v = self.pool.gather(
                 self.alloc.cross_table(req.rid))
+        # publish the finished request's full prompt pages under their
+        # content hashes BEFORE freeing: the cache keeps them alive
+        # (refcounted) for the next request sharing this prefix
+        if self.prefix_cache:
+            self.alloc.commit(req.rid, self._page_keys.pop(req.rid, []))
         self.alloc.free(req.rid)
         self._reqs.pop(req.rid)
         return PrefilledKV(req=req, first_token=first_tok,
@@ -363,7 +450,9 @@ class PrefillEngine:
                            pages_k=pages_k, pages_v=pages_v,
                            kv_len=req.prompt_len,
                            cross_k=cross_k, cross_v=cross_v,
-                           enc_len=enc_len)
+                           enc_len=enc_len,
+                           cached_tokens=req.cached_prefix_tokens,
+                           cross_cached=cross_cached)
 
     # -- dense backend (legacy fallback) --------------------------------
     def _step_dense(self, chunk: chunking.Chunk, now: float
@@ -420,7 +509,10 @@ class PrefillEngine:
                 req.prompt_tokens, req.decode_len)
             req.predicted_bucket, req.predicted_lo, req.predicted_hi = \
                 b, lo, hi
-        return chunking.chunks_for(req.prompt_len, self.chunk_size)
+        # cached-prefix tokens were never chunked, so they also never
+        # contribute chunk-granular transfer slices
+        return chunking.chunks_for(
+            req.prompt_len - req.cached_prefix_tokens, self.chunk_size)
 
     def select_decode_instance(self, loads, req: Request) -> Optional[str]:
         return self.dispatcher.select(

@@ -15,9 +15,10 @@ Continuous batching admission policies against the paged KV allocator:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-from repro.kvcache.paged import PagedAllocator
+from repro.kvcache.paged import (PagedAllocator, request_cross_key,
+                                 request_page_keys)
 from repro.runtime.request import Request
 
 POLICIES = ("greedy", "reserve-static", "reserve-dynamic")
@@ -70,10 +71,21 @@ class DecodeScheduler:
         # full logical length
         return self.alloc.pages_for_request(max(1, tokens))
 
-    def _admissible(self, req: Request) -> bool:
+    def _keys(self, req: Request) -> Optional[list]:
+        """Prefix-cache page keys for admission math + alloc aliasing
+        (None when the cache is off or the config windows pages)."""
+        if not self.alloc.prefix_cache or self.alloc.window:
+            return None
+        return request_page_keys(req, self.alloc.page_size)
+
+    def _admissible(self, req: Request,
+                    page_keys: Optional[list] = None) -> bool:
         """Policy decision. The request's prefilled KV (prompt_len tokens)
-        must be materialized on admission; generation grows it."""
-        now_pages = self._pages_for_tokens(req.prompt_len + 1)
+        must be materialized on admission; generation grows it — pages
+        already shared through the prefix cache are budgeted ONCE across
+        the batch (``pages_needed`` subtracts the cached leading run)."""
+        now_pages = self.alloc.pages_needed(req.prompt_len + 1,
+                                            page_keys=page_keys)
         hi = req.predicted_hi or req.decode_len
         if self.policy == "greedy":
             return self.alloc.free_pages >= now_pages
@@ -81,7 +93,8 @@ class DecodeScheduler:
             # free pages must cover this request's full predicted usage
             # PLUS the outstanding (reserved but not yet allocated) growth
             # of every running request — a reservation is a commitment.
-            total = self._pages_for_tokens(req.prompt_len + hi)
+            total = self.alloc.pages_needed(req.prompt_len + hi,
+                                            page_keys=page_keys)
             committed = 0
             for rid, ri in self.running.items():
                 r_hi = ri.req.predicted_hi or ri.req.decode_len
@@ -99,8 +112,8 @@ class DecodeScheduler:
             self._pages_for_tokens(min(ri.predicted_remaining(), shortest))
             - self._pages_for_tokens(0)
             for ri in self.running.values())
-        growth += self._pages_for_tokens(
-            req.prompt_len + min(hi, shortest)) - 0
+        growth += self.alloc.pages_needed(
+            req.prompt_len + min(hi, shortest), page_keys=page_keys)
         return self.alloc.free_pages >= growth
 
     def admit(self) -> List[Request]:
@@ -115,9 +128,21 @@ class DecodeScheduler:
                 # short-circuit the scan (identical admission outcome)
                 remaining.extend(self.queue[i:])
                 break
-            if (self._admissible(req)
-                    and self.alloc.can_admit(req.prompt_len + 1)):
-                self.alloc.alloc(req.rid, req.prompt_len)
+            keys = self._keys(req)
+            cross_key = (request_cross_key(req)
+                         if keys is not None
+                         and self.alloc.cross_pages_per_request else None)
+            if (self._admissible(req, keys)
+                    and self.alloc.can_admit(req.prompt_len + 1,
+                                             page_keys=keys,
+                                             cross_key=cross_key)):
+                self.alloc.alloc(req.rid, req.prompt_len,
+                                 page_keys=keys, cross_key=cross_key)
+                if keys:
+                    # publish ALL full prompt pages: the aliased prefix
+                    # is already cached, and the freshly installed pages
+                    # become hits for the next sharer admitted here
+                    self.alloc.commit(req.rid, keys)
                 heavy = req.is_heavy_decode(HEAVY_THRESH)
                 self.running[req.rid] = RunningInfo(req, heavy=heavy)
                 self.ctx_sum += req.prompt_len + req.generated

@@ -670,6 +670,26 @@ def cross_prefill_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
     return out.reshape(b, s, -1) @ p["wo"], k_layer, v_layer
 
 
+def cross_attend_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                       k_layer: jnp.ndarray, v_layer: jnp.ndarray, *,
+                       cross_bt, cross_len):
+    """Read-only cross-attention sublayer of a fused paged prefill
+    chunk: the chunk carries NO encoder work — every segment's cross
+    pages already hold their encoder K/V (the request's first chunk
+    scattered them earlier, or they were aliased from the cross-page
+    cache), so the encoder stack and the one-shot scatter are skipped
+    entirely.  Same read as ``cross_prefill_paged``.
+    Returns (attn_out, k_layer, v_layer)."""
+    from repro.kernels import ops
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    out = ops.prefill_attention(
+        q, k_layer, v_layer, cross_len,
+        jnp.zeros_like(cross_len), block_table=cross_bt, causal=False)
+    return out.reshape(b, s, -1) @ p["wo"], k_layer, v_layer
+
+
 def cross_decode_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray,
                        k_layer: jnp.ndarray, v_layer: jnp.ndarray, *,
                        cross_bt, cross_len):

@@ -509,6 +509,14 @@ def prefill_paged(params, cfg: ModelConfig, tokens, q_offset, kv_len,
                 p, cfg, x, k_layer, v_layer, enc_h=enc_h,
                 cross_bt=cross_bt, cross_len=cross_len,
                 cross_pg=cross_pg, cross_off=cross_off)
+    elif cross_bt is not None:
+        # read-only cross chunk: every segment's cross pages are already
+        # written (first chunk ran earlier, or the pages came from the
+        # cross cache) — skip the O(enc_ctx²) encoder stack + scatter
+        def cross(p, x, k_layer, v_layer):
+            return A.cross_attend_paged(p, cfg, x, k_layer, v_layer,
+                                        cross_bt=cross_bt,
+                                        cross_len=cross_len)
 
     h, k_pool, v_pool = _run_layers_paged(params, cfg, h, k_pool, v_pool,
                                           attn, cross)

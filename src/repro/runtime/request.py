@@ -84,6 +84,17 @@ class Request:
     enc_embeds: Optional[np.ndarray] = None
     # user stop criteria (serving API); None = oracle mode (decode_len)
     sampling: Optional[SamplingParams] = None
+    # --- shared-prefix identity (prefix cache, docs/prefix_cache.md) ---
+    # prefix_id/prefix_len let the COST-MODEL runtime (no real tokens)
+    # express "the first prefix_len tokens are the shared template
+    # prefix_id"; engine requests derive sharing from prompt_tokens
+    # content instead and ignore these
+    prefix_id: Optional[str] = None
+    prefix_len: int = 0
+    # stamped by the prefill side at alloc: leading prompt pages/tokens
+    # aliased from the prefix cache (skipped recompute + wire bytes)
+    cached_prefix_tokens: int = 0
+    cached_prefix_pages: int = 0
     # --- scheduling state ---
     phase: Phase = Phase.WAITING
     predicted_bucket: int = -1           # length-range bucket (§3.3.2)
@@ -156,4 +167,13 @@ def summarize(reqs: List[Request]) -> dict:
         out["recovered"] = len(recovered)
         out["avg_recovered_jct"] = float(np.mean([r.jct
                                                   for r in recovered]))
+    # prefix-cache accounting — keys appear ONLY when at least one page
+    # was actually deduped, so cache-off runs stay byte-identical to the
+    # golden metrics
+    pages_saved = sum(r.cached_prefix_pages for r in done)
+    if pages_saved:
+        out["pages_saved"] = pages_saved
+        out["cache_hit_rate"] = float(
+            sum(r.cached_prefix_tokens for r in done)
+            / sum(r.prompt_len for r in done))
     return out

@@ -228,10 +228,12 @@ class Cluster:
                  faults: Optional[FaultSpec] = None,
                  recovery: Optional[RecoveryPolicy] = None,
                  monitor_interval_s: Optional[float] = None,
-                 collect_tokens: bool = True):
+                 collect_tokens: bool = True,
+                 prefix_cache: bool = False):
         assert runtime in ("sim", "engine"), runtime
         self.cfg = cfg
         self.runtime = runtime
+        self.prefix_cache = prefix_cache
         self.predictor = (OraclePredictor() if predictor is _UNSET
                           else predictor)
         self.network = network or NetworkStack(TS_NVLINK)
@@ -264,7 +266,8 @@ class Cluster:
                     chunk_size=chunk_size, decode_policy=decode_policy,
                     n_pages=n_pages, page_size=page_size,
                     max_batch=max_batch,
-                    co_run_predictor=co_run_predictor)
+                    co_run_predictor=co_run_predictor,
+                    prefix_cache=prefix_cache)
         else:
             assert params is not None, "engine runtime needs model params"
             from repro.serving.engine_instance import EngineInstance
@@ -281,7 +284,8 @@ class Cluster:
                     sched_batch=sched_batch, chunk_size=chunk_size,
                     decode_policy=decode_policy, max_slots=max_batch,
                     n_pages=n_pages, page_size=page_size,
-                    max_seq=max_seq, backend=backend, step_dt=step_dt)
+                    max_seq=max_seq, backend=backend, step_dt=step_dt,
+                    prefix_cache=prefix_cache)
 
         self.instances: List[InstanceRuntime] = \
             [mk(i, Role.PREFILL) for i in range(n_prefill)] \
@@ -566,6 +570,8 @@ class Cluster:
         req.prefilled = 0
         req.generated = 0
         req.swapped = False
+        req.cached_prefix_tokens = 0     # re-prefill re-evaluates the
+        req.cached_prefix_pages = 0      # cache on the new instance
         req.t_prefill_start = req.t_first_token = -1.0
         req.t_transfer_done = req.t_decode_start = -1.0
         buf = self._buffers.get(req.rid)
@@ -634,9 +640,10 @@ class Cluster:
         self.gsched.note_dispatch(req.rid, did)
         delay = oc.transfer_delay_s
         if delay is None:
-            delay = self.network.send_kv(self.cfg, req.prompt_len,
-                                         n_chunks=oc.n_chunks,
-                                         enc_len=self.cfg.cross_ctx)
+            delay = self.network.send_kv(
+                self.cfg, req.prompt_len, n_chunks=oc.n_chunks,
+                enc_len=self.cfg.cross_ctx,
+                cached_tokens=req.cached_prefix_tokens)
         req.phase = Phase.TRANSFER
         attempt = req.retries
         if self.fault_plane is None:

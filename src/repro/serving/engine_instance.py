@@ -33,7 +33,7 @@ class EngineInstance:
                  prefill_policy="sjf", sched_batch=16, chunk_size=16,
                  decode_policy="reserve-dynamic", max_slots=8,
                  n_pages=256, page_size=16, max_seq=128,
-                 backend="auto", step_dt=0.01):
+                 backend="auto", step_dt=0.01, prefix_cache=False):
         self.iid = iid
         self.flip = FlipMachine(role)
         self.step_dt = step_dt
@@ -46,11 +46,13 @@ class EngineInstance:
             f"{iid}/prefill", cfg, params,
             scheduler=PrefillScheduler(prefill_policy, sched_batch),
             network=network, chunk_size=chunk_size, max_seq=max_seq,
-            backend=backend, n_pages=n_pages, page_size=page_size)
+            backend=backend, n_pages=n_pages, page_size=page_size,
+            prefix_cache=prefix_cache)
         self.de = DecodeEngine(
             f"{iid}/decode", cfg, params, max_slots=max_slots,
             max_seq=max_seq, policy=decode_policy, n_pages=n_pages,
-            page_size=page_size, backend=backend)
+            page_size=page_size, backend=backend,
+            prefix_cache=prefix_cache)
 
     # -- prefill facet ------------------------------------------------------
     def prefill_enqueue(self, req: Request) -> None:

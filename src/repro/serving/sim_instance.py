@@ -10,14 +10,15 @@ when editing.
 """
 from __future__ import annotations
 
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Deque, Dict, List, Optional
 
 from repro.core import chunking
 from repro.core.sched.decode_scheduler import DecodeScheduler
 from repro.core.sched.flip import FlipMachine, Role
 from repro.core.sched.prefill_scheduler import PrefillScheduler
-from repro.kvcache.paged import OutOfPages, PagedAllocator
+from repro.kvcache.paged import (OutOfPages, PagedAllocator,
+                                 request_page_keys)
 from repro.runtime.costmodel import CostModel
 from repro.runtime.request import Phase, Request
 from repro.serving.runtime import PrefillOutcome, StepEvents
@@ -31,7 +32,8 @@ class SimInstance:
 
     def __init__(self, iid: str, role: Role, *, cfg, cost: CostModel,
                  sched_policy, sched_batch, chunk_size, decode_policy,
-                 n_pages, page_size, max_batch, co_run_predictor=True):
+                 n_pages, page_size, max_batch, co_run_predictor=True,
+                 prefix_cache=False):
         self.iid = iid
         self.cfg = cfg
         self.cost = cost
@@ -48,8 +50,17 @@ class SimInstance:
         self.chunks: Deque[chunking.Chunk] = deque()
         self._inflight: Optional[chunking.Chunk] = None
         self.reqs: Dict[str, Request] = {}
+        # prefix cache (cost-model analogue): the prefill facet has no
+        # device pool, so its cache is a capacity-bounded LRU over page
+        # KEYS — a hit skips the chunk cost + wire bytes the real engine
+        # would skip.  The decode facet shares pages through the real
+        # allocator refcounts, same as the engine runtime.
+        self.prefix_cache = prefix_cache and not cfg.sliding_window
+        self._prefix_lru: "OrderedDict[bytes, bool]" = OrderedDict()
+        self._prefix_cap = n_pages
         # decode facet
-        self.alloc = PagedAllocator(n_pages, page_size)
+        self.alloc = PagedAllocator(n_pages, page_size,
+                                    prefix_cache=self.prefix_cache)
         self.dsched = DecodeScheduler(self.alloc, decode_policy, max_batch)
         self.busy = 0.0
         self.running = False
@@ -62,11 +73,45 @@ class SimInstance:
     def prefill_queued_tokens(self) -> int:
         return self.psched.queued_tokens
 
+    def _prefill_cache_lookup(self, req: Request) -> int:
+        """Model the prefill-side prefix cache: count the leading run of
+        the request's page keys already in the LRU (cache hit => the
+        engine would alias those pages and skip their chunks), then
+        commit ALL of its full-page keys.  Returns cached TOKENS, capped
+        so at least the last prompt token is always 'recomputed' (the
+        engine needs its logits for the first token)."""
+        keys = request_page_keys(req, self.alloc.page_size)
+        if not keys:
+            return 0
+        hits = 0
+        for k in keys:
+            if k not in self._prefix_lru:
+                break
+            self._prefix_lru.move_to_end(k)
+            hits += 1
+        for k in keys:
+            self._prefix_lru[k] = True
+            self._prefix_lru.move_to_end(k)
+        while len(self._prefix_lru) > self._prefix_cap:
+            self._prefix_lru.popitem(last=False)
+        ps = self.alloc.page_size
+        return min(hits, max(0, (req.prompt_len - 1) // ps)) * ps
+
     def _refill(self) -> None:
         batch = self.psched.next_batch(self.psched.sched_batch)
         if batch:
+            starts: Dict[str, int] = {}
+            if self.prefix_cache:
+                for r in batch:
+                    cached = self._prefill_cache_lookup(r)
+                    if cached:
+                        r.cached_prefix_tokens = cached
+                        r.cached_prefix_pages = cached // \
+                            self.alloc.page_size
+                        starts[r.rid] = cached
             pairs = [(r.rid, r.prompt_len) for r in batch]
-            self.chunks.extend(chunking.partition(pairs, self.chunk_size))
+            self.chunks.extend(chunking.partition(
+                pairs, self.chunk_size, starts=starts or None))
             for r in batch:
                 self.reqs[r.rid] = r
 
@@ -103,8 +148,9 @@ class SimInstance:
                 self.reqs.pop(req.rid)
                 out.append(PrefillOutcome(
                     req=req,
-                    n_chunks=chunking.chunks_for(req.prompt_len,
-                                                 self.chunk_size)))
+                    n_chunks=chunking.chunks_for(
+                        req.prompt_len - req.cached_prefix_tokens,
+                        self.chunk_size)))
         return out
 
     def prefill_idle(self) -> bool:
@@ -170,6 +216,10 @@ class SimInstance:
                 req.t_finish = now
                 self.dsched.finish(rid)
                 ev.finished.append(req)
+        # no device pool here: copy-on-write redirects are bookkeeping
+        # only, but the pending list must still be drained (the engine
+        # runtime replays these on its PagePool)
+        self.alloc.take_cow_copies()
         self.busy += iter_time
         return ev
 
