@@ -29,6 +29,7 @@ ALL = [
     ("roofline", "benchmarks.roofline_report"),
     ("paged_serving", "benchmarks.paged_serving"),
     ("fleet", "benchmarks.fleet"),
+    ("wallclock", "benchmarks.wallclock"),
 ]
 
 

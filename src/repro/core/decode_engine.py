@@ -26,6 +26,7 @@ Execution backends (selected by ``core.backend.backend_for``):
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -40,6 +41,15 @@ from repro.kvcache.paged import PagedAllocator, PagePool
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.runtime.request import Phase, Request
+
+
+def _step_seed(seed: int, n_generated: int) -> int:
+    """Per-(request, step) PRNG seed for on-device sampling.  Derived
+    from the request's ``SamplingParams.seed`` and how many tokens it
+    has generated — never from the decode slot or batch composition —
+    so a request's sample stream is identical across engines, admission
+    orders and (async-runtime) thread interleavings."""
+    return zlib.crc32(f"{seed}:{n_generated}".encode()) & 0xFFFFFFFF
 
 
 @dataclasses.dataclass
@@ -96,6 +106,15 @@ class DecodeEngine:
                                                pages, offs, bt, lens,
                                                kp, vp, cbt, clens)
                 donate = (9, 10)
+
+                def _decode_sampled(params, toks, pos, pages, offs, bt,
+                                    lens, cbt, clens, temps, tks, seeds,
+                                    kp, vp):
+                    return M.decode_step_paged(params, cfg, toks, pos,
+                                               pages, offs, bt, lens,
+                                               kp, vp, cbt, clens,
+                                               temps, tks, seeds)
+                donate_s = (12, 13)
             else:
                 def _decode_paged(params, toks, pos, pages, offs, bt,
                                   lens, kp, vp):
@@ -103,10 +122,23 @@ class DecodeEngine:
                                                pages, offs, bt, lens,
                                                kp, vp)
                 donate = (7, 8)
+
+                def _decode_sampled(params, toks, pos, pages, offs, bt,
+                                    lens, temps, tks, seeds, kp, vp):
+                    return M.decode_step_paged(params, cfg, toks, pos,
+                                               pages, offs, bt, lens,
+                                               kp, vp, None, None,
+                                               temps, tks, seeds)
+                donate_s = (10, 11)
             # donate the pools: in-place pool update per iteration
             # instead of a full KV-pool copy (no-op on CPU)
             self._decode_paged = jax.jit(_decode_paged,
                                          donate_argnums=donate)
+            # sampled variant compiles lazily on first use, so pure
+            # greedy workloads never pay for it — and greedy batches
+            # keep calling the exact pre-sampling executable
+            self._decode_paged_sampled = jax.jit(_decode_sampled,
+                                                 donate_argnums=donate_s)
         else:
             self.cache = M.init_cache(cfg, max_slots, max_seq)
 
@@ -292,17 +324,39 @@ class DecodeEngine:
         if cows:
             src, dst = zip(*cows)
             self.pool = self.pool.copy_pages(list(src), list(dst))
+        # on-device sampling: only when a resident request asks for it —
+        # pure-greedy batches dispatch the original executable, so their
+        # tokens stay byte-identical to the pre-sampling engine
+        sampled = any(
+            st.req.sampling is not None and not st.req.sampling.greedy
+            for st in self.slots.values())
+        if sampled:
+            temps = np.zeros((ms,), np.float32)
+            tks = np.zeros((ms,), np.int32)
+            seeds = np.zeros((ms,), np.uint32)
+            for s, st in self.slots.items():
+                sp = st.req.sampling
+                if sp is not None and not sp.greedy:
+                    temps[s] = sp.temperature
+                    tks[s] = sp.top_k
+                    seeds[s] = _step_seed(sp.seed, len(st.tokens))
+            extra = (jnp.asarray(temps), jnp.asarray(tks),
+                     jnp.asarray(seeds))
+            fn = self._decode_paged_sampled
+        else:
+            extra = ()
+            fn = self._decode_paged
         if cross:
-            nxt, kp, vp = self._decode_paged(
+            nxt, kp, vp = fn(
                 self.params, jnp.asarray(toks), jnp.asarray(pos),
                 jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(bt),
                 jnp.asarray(lens), jnp.asarray(cbt), jnp.asarray(clens),
-                self.pool.k, self.pool.v)
+                *extra, self.pool.k, self.pool.v)
         else:
-            nxt, kp, vp = self._decode_paged(
+            nxt, kp, vp = fn(
                 self.params, jnp.asarray(toks), jnp.asarray(pos),
                 jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(bt),
-                jnp.asarray(lens), self.pool.k, self.pool.v)
+                jnp.asarray(lens), *extra, self.pool.k, self.pool.v)
         self.pool = PagePool(k=kp, v=vp)
         return np.asarray(nxt)
 

@@ -431,7 +431,12 @@ class PrefillEngine:
         # payload still CARRIES any cached-prefix pages (they are live
         # aliases in this pool) so a decode side without those cache
         # entries stays correct; the wire accounting above subtracts
-        # them (content-addressed store assumption, docs/prefix_cache.md)
+        # them (content-addressed store assumption, docs/prefix_cache.md).
+        # gather() materializes a COPY of the page contents, and the
+        # pages are freed right below — the payload is double-buffered
+        # by construction: a transfer thread can hold it in flight
+        # while this engine's next chunk scatters into the freed pages
+        # (docs/async_runtime.md)
         pages_k, pages_v = self.pool.gather(self.alloc.live_pages(req.rid))
         cross_k = cross_v = None
         if enc_len:

@@ -35,9 +35,11 @@ pre-cache allocator.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Dict, Hashable, List, Optional, Tuple
 
@@ -109,6 +111,17 @@ def request_cross_key(req) -> Optional[bytes]:
     return hashlib.sha1(emb.tobytes()).digest()
 
 
+def _locked(fn):
+    """Run an allocator method inside ``_mutate()`` (see below): one
+    reentrant lock per allocator serializes every mutation and every
+    compound admission read against concurrent workers."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._mutate():
+            return fn(self, *args, **kwargs)
+    return wrapper
+
+
 @dataclasses.dataclass
 class PagedAllocator:
     """Free-list page allocator with per-request block tables.
@@ -138,6 +151,21 @@ class PagedAllocator:
     prefix_cache: bool = False
 
     def __post_init__(self):
+        # -- thread safety (docs/async_runtime.md) ---------------------
+        # The wall-clock runtime mutates one allocator from several
+        # threads at once: a prefill/decode worker appending or freeing
+        # while the client thread cancels, or the transfer worker
+        # installing received pages.  A single reentrant lock serializes
+        # every mutation and every compound read (can_admit must see a
+        # consistent free-list + cache); single-threaded callers (the
+        # sync Cluster event loop) pay one uncontended acquire, which is
+        # noise next to the bookkeeping itself.  ``_mut_depth`` is the
+        # debug guard: internal free-list/refcount helpers assert they
+        # run inside ``_mutate`` so any future mutation path that skips
+        # the lock trips an assertion in tests instead of corrupting
+        # the free list silently in production.
+        self._lock = threading.RLock()
+        self._mut_depth = 0
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
         self._tables: Dict[str, List[Optional[int]]] = {}
         self._lens: Dict[str, int] = {}
@@ -248,7 +276,21 @@ class PagedAllocator:
             else 0.0
 
     # -- internals -----------------------------------------------------
+    @contextlib.contextmanager
+    def _mutate(self):
+        """Serialize a mutation (reentrant).  Every public mutator wraps
+        itself in this; ``_decref``/``_take_page`` assert they run
+        inside it, so an unlocked mutation path fails loudly in debug
+        runs (tests) rather than racing the free list."""
+        with self._lock:
+            self._mut_depth += 1
+            try:
+                yield
+            finally:
+                self._mut_depth -= 1
+
     def _decref(self, page: int) -> None:
+        assert self._mut_depth > 0, "allocator mutated outside its lock"
         r = self._refs[page] - 1
         assert r >= 0, f"negative refcount for page {page}"
         if r == 0:
@@ -302,6 +344,7 @@ class PagedAllocator:
                 self._decref(p)
 
     def _take_page(self, why: str) -> int:
+        assert self._mut_depth > 0, "allocator mutated outside its lock"
         if not self._free and self.prefix_cache:
             self._evict(1)
         if not self._free:
@@ -309,6 +352,7 @@ class PagedAllocator:
         return self._free.pop()
 
     # -- mutations -----------------------------------------------------
+    @_locked
     def alloc(self, rid: str, n_tokens: int, *,
               materialize_all: bool = False,
               page_keys: Optional[List[Hashable]] = None,
@@ -387,6 +431,7 @@ class PagedAllocator:
                     self._cross_key_pending[rid] = cross_key
         return self.table(rid)
 
+    @_locked
     def commit(self, rid: str, page_keys: List[Hashable]) -> int:
         """Publish the request's leading pages into the prefix cache
         under their content keys (one extra ref per new entry), after
@@ -410,6 +455,7 @@ class PagedAllocator:
             added += 1
         return added
 
+    @_locked
     def commit_cross(self, rid: str) -> bool:
         """Publish the request's cross pages under the ``cross_key`` its
         ``alloc`` recorded — called after the engine's one-shot encoder
@@ -423,6 +469,7 @@ class PagedAllocator:
         self._cross_cache[key] = list(pages)
         return True
 
+    @_locked
     def fork(self, dst: str, src: str) -> List[Optional[int]]:
         """Alias ``dst`` to every page of ``src`` (self + cross tables):
         pure refcount sharing, no copies.  Decode appends into a forked
@@ -445,6 +492,7 @@ class PagedAllocator:
             self._cross_hit[dst] = True
         return self.table(dst)
 
+    @_locked
     def append_token(self, rid: str) -> int:
         """Account one decoded token; grows the table when a page fills
         and frees pages that slid out of the window.  Never writes into
@@ -479,6 +527,7 @@ class PagedAllocator:
         self._lens[rid] = ln + 1
         return page
 
+    @_locked
     def take_cow_copies(self) -> List[Tuple[int, int]]:
         """Drain pending copy-on-write (src, dst) page pairs.  The engine
         must replay these on the device pool (``PagePool.copy_pages``)
@@ -486,6 +535,7 @@ class PagedAllocator:
         out, self._cow_pending = self._cow_pending, []
         return out
 
+    @_locked
     def trim(self, rid: str, processed: int) -> int:
         """Release pages wholly outside the window of any query at
         position >= ``processed`` (chunked prefill calls this as chunks
@@ -510,6 +560,7 @@ class PagedAllocator:
         self._trimmed[rid] = max(start, stop)
         return freed
 
+    @_locked
     def free(self, rid: str) -> None:
         """Release the request's references.  Pages shared with other
         tables or pinned by a cache entry survive (decref); exclusively
@@ -529,6 +580,7 @@ class PagedAllocator:
         self._cross_key_pending.pop(rid, None)
         self._cross_hit.pop(rid, None)
 
+    @_locked
     def pages_needed(self, n_tokens: int, *,
                      materialize_all: bool = False,
                      page_keys: Optional[List[Hashable]] = None) -> int:
@@ -542,6 +594,7 @@ class PagedAllocator:
             need -= min(self._prefix_hits(page_keys), need)
         return need
 
+    @_locked
     def can_admit(self, n_tokens: int, *,
                   materialize_all: bool = False,
                   page_keys: Optional[List[Hashable]] = None,

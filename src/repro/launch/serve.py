@@ -5,6 +5,8 @@ unified serving API (repro.serving.Cluster — see docs/serving_api.md).
   PYTHONPATH=src python -m repro.launch.serve --workload Mixed --requests 128
   PYTHONPATH=src python -m repro.launch.serve --requests 16 --no-flip
   PYTHONPATH=src python -m repro.launch.serve --real   # tiny model, CPU
+  PYTHONPATH=src python -m repro.launch.serve --wall-clock \\
+      --arrival-rate 20 --arrival-process poisson --requests 12
 """
 import argparse
 import copy
@@ -57,6 +59,54 @@ def _run_real(args):
     _print_result(args, cluster.result())
 
 
+def _run_wall_clock(args):
+    """Wall-clock async runtime (docs/async_runtime.md): concurrent
+    instances + overlapped KV transfer, driven open-loop from an
+    arrival process.  Real seconds, real engines, tiny model."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.runtime.workload import generate
+    from repro.serving import ArrivalSchedule, AsyncCluster, OpenLoopClient
+
+    cfg = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                              dtype="float32")
+    print(f"model: {cfg.name}  layers={cfg.n_layers} d={cfg.d_model}")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = generate(args.workload, min(args.requests, 32), seed=0,
+                    max_prompt=48, max_decode=12,
+                    vocab_size=cfg.vocab_size)
+    sched = ArrivalSchedule(process=args.arrival_process,
+                            rate=args.arrival_rate, seed=0,
+                            period_s=args.arrival_period)
+    with AsyncCluster(cfg, params=params,
+                      n_prefill=args.n_prefill, n_decode=args.n_decode,
+                      prefill_policy=args.prefill_policy,
+                      decode_policy=args.decode_policy,
+                      dispatch_policy=args.dispatch,
+                      chunk_size=16, max_seq=128,
+                      overlap_transfer=args.overlap) as cluster:
+        client = OpenLoopClient(cluster, reqs, sched).start()
+        client.join()
+        ok = cluster.drain(timeout=600)
+        assert ok, "wall-clock run wedged (drain timed out)"
+        for h in client.handles[:4]:
+            res = h.result(wait=False)
+            print(f"  {res.rid}: {len(res.tokens)} tokens "
+                  f"ttft={res.ttft:.3f}s jct={res.jct:.3f}s")
+        r = cluster.result(reqs)
+    m = r.metrics
+    print(f"open-loop {args.arrival_process} @ {args.arrival_rate} req/s"
+          f"  overlap_transfer={args.overlap}")
+    print(f"n={m['n']}  avg TTFT {m['avg_ttft']:.3f}s  "
+          f"avg JCT {m['avg_jct']:.3f}s  (wall seconds)")
+    print(f"makespan {m['makespan']:.2f}s  "
+          f"throughput {m['n'] / m['makespan']:.2f} req/s")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="Mixed",
@@ -77,8 +127,25 @@ def main():
                     default=True, help="enable instance flip (§3.5)")
     ap.add_argument("--real", action="store_true",
                     help="run the real engines on a tiny model (CPU)")
+    ap.add_argument("--wall-clock", action="store_true",
+                    help="wall-clock async runtime: concurrent "
+                         "instances, overlapped KV transfer, open-loop "
+                         "arrivals (implies the tiny real model)")
+    ap.add_argument("--arrival-rate", type=float, default=20.0,
+                    help="open-loop mean arrival rate, req/s")
+    ap.add_argument("--arrival-process", default="poisson",
+                    choices=["batch", "poisson", "bursty", "diurnal"])
+    ap.add_argument("--arrival-period", type=float, default=10.0,
+                    help="burst cycle / day length in seconds")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="overlap KV transfer with the next prefill "
+                         "chunk (--no-overlap serializes, the ablation)")
     args = ap.parse_args()
 
+    if args.wall_clock:
+        _run_wall_clock(args)
+        return
     if args.real:
         _run_real(args)
         return

@@ -526,9 +526,36 @@ def prefill_paged(params, cfg: ModelConfig, tokens, q_offset, kv_len,
     return next_tok, logits[:, 0], k_pool, v_pool
 
 
+def sample_tokens(logits, temps, top_ks, seeds):
+    """Batched on-device token selection: greedy argmax where
+    ``temps == 0``, else a temperature/top-k categorical draw.
+
+    logits: (slots, V); temps: (slots,) float32; top_ks: (slots,) int32
+    (0 = no top-k restriction); seeds: (slots,) uint32 per-slot PRNG
+    seeds.  Callers derive each seed from (request seed, n_generated) on
+    the host, so a request's sample stream is independent of its decode
+    slot and of batch composition.  The greedy lane bypasses the
+    categorical entirely, so temperature-0 slots stay byte-identical to
+    plain ``argmax`` even when they share a batch with sampled slots.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def draw(lg, temp, k, seed):
+        # top-k: keep logits >= the k-th largest (k == 0 keeps all)
+        kth = jnp.sort(lg)[::-1][jnp.clip(k - 1, 0, lg.shape[0] - 1)]
+        masked = jnp.where((k > 0) & (lg < kth), -jnp.inf, lg)
+        safe_t = jnp.where(temp > 0, temp, 1.0)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+        return jax.random.categorical(key, masked / safe_t)
+
+    sampled = jax.vmap(draw)(logits, temps, top_ks, seeds)
+    return jnp.where(temps > 0.0, sampled.astype(jnp.int32), greedy)
+
+
 def decode_step_paged(params, cfg: ModelConfig, tokens, pos, pages, offs,
                       block_tables, lens, k_pool, v_pool,
-                      cross_bt=None, cross_len=None):
+                      cross_bt=None, cross_len=None,
+                      temps=None, top_ks=None, seeds=None):
     """Full-slot-batch decode iteration against the shared page pool.
 
     tokens: (slots, 1) last emitted token per slot; pos: (slots,) append
@@ -539,7 +566,9 @@ def decode_step_paged(params, cfg: ModelConfig, tokens, pos, pages, offs,
     read-only cross pages: cross_bt: (slots, cross_slots); cross_len:
     (slots,) encoder tokens per slot — no cross scatter ever happens at
     decode (the pages were installed once at admission).  Token
-    selection (argmax) stays on device: returns
+    selection stays on device: argmax when ``temps is None``, else
+    per-slot temperature/top-k sampling via ``sample_tokens`` (greedy
+    slots keep the argmax result exactly).  Returns
     (next_tokens (slots,) int32, k_pool, v_pool).
     """
     h = _embed(params, cfg, tokens, pos[:, None])
@@ -562,7 +591,10 @@ def decode_step_paged(params, cfg: ModelConfig, tokens, pos, pages, offs,
     h, k_pool, v_pool = _run_layers_paged(params, cfg, h, k_pool, v_pool,
                                           attn, cross)
     logits = _head(params, cfg, h)                 # (slots, 1, V)
-    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    if temps is None:
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    else:
+        next_tok = sample_tokens(logits[:, -1], temps, top_ks, seeds)
     return next_tok, k_pool, v_pool
 
 

@@ -47,13 +47,32 @@ class SamplingParams:
     max_new_tokens: Optional[int] = None
     stop_token_ids: Tuple[int, ...] = ()
     ignore_eos: bool = False
+    # --- on-device sampling (docs/async_runtime.md) ---
+    # temperature == 0.0 -> greedy argmax, byte-identical to the
+    # pre-sampling engines.  temperature > 0 draws from the softmax of
+    # logits/temperature, restricted to the top_k highest logits when
+    # top_k > 0.  seed makes a request's sample stream deterministic
+    # regardless of batch composition or decode-slot placement: the
+    # per-step key is derived from (seed, n_generated), never from the
+    # slot index.
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
 
     def __post_init__(self):
         if self.max_new_tokens is not None and self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.temperature < 0.0:
+            raise ValueError("temperature must be >= 0")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
         # normalize lists/sets passed by callers
         object.__setattr__(self, "stop_token_ids",
                            tuple(self.stop_token_ids))
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
 
     def should_stop(self, n_new_tokens: int, last_token: Optional[int]
                     ) -> bool:

@@ -11,8 +11,16 @@ deterministic instance crashes/hangs and KV-transfer faults;
 ``RecoveryPolicy`` tunes detection timeouts, retry backoff and the
 retry budget; ``ClusterStallError`` carries a per-instance snapshot
 when the cluster wedges.
+
+Wall-clock runtime (docs/async_runtime.md): ``AsyncCluster`` drives
+the same engine instances on concurrent worker threads with overlapped
+KV transfer, measured in real seconds; ``OpenLoopClient`` +
+``ArrivalSchedule`` submit on Poisson/bursty/diurnal wall-clock
+schedules.
 """
 from repro.runtime.request import SamplingParams
+from repro.serving.arrivals import ArrivalSchedule, OpenLoopClient
+from repro.serving.async_runtime import AsyncCluster, AsyncRequestHandle
 from repro.serving.cluster import (Cluster, ClusterStallError,
                                    RequestHandle, RequestResult, SimResult)
 from repro.serving.faults import FaultEvent, FaultSpec, RecoveryPolicy
@@ -23,4 +31,6 @@ __all__ = [
     "Cluster", "ClusterStallError", "RequestHandle", "RequestResult",
     "SimResult", "SamplingParams", "FaultSpec", "FaultEvent",
     "RecoveryPolicy", "InstanceRuntime", "PrefillOutcome", "StepEvents",
+    "AsyncCluster", "AsyncRequestHandle", "ArrivalSchedule",
+    "OpenLoopClient",
 ]

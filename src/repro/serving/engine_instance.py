@@ -15,6 +15,7 @@ instance flip is the same internal-variable change as on the sim side.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import List, Optional
 
@@ -40,6 +41,12 @@ class EngineInstance:
         self.busy = 0.0
         self.running = False
         self.swaps = 0
+        # serializes ALL engine calls on this instance under the
+        # wall-clock runtime (docs/async_runtime.md): the instance's
+        # worker step, transfer-side decode_enqueue, cancels and the
+        # crash-recovery sweep.  Reentrant so a holder can nest helper
+        # calls; the synchronous Cluster never contends on it.
+        self.lock = threading.RLock()
         # prediction is cluster-owned (uniform across runtimes), so the
         # prefill engine gets no predictor of its own
         self.pe = PrefillEngine(

@@ -20,6 +20,13 @@ schedules a ``*_done`` event and calls ``*_complete`` at that time,
 which performs the step's effects and reports what finished.  The sim
 runtime prices the step with the cost model; the engine runtime runs
 the real model and bills a fixed virtual tick (``step_dt``).
+
+Concurrency extension (docs/async_runtime.md): an instance that wants
+to run under the wall-clock ``AsyncCluster`` additionally exposes a
+reentrant ``lock`` serializing every method above — the async runtime
+takes it around each worker step, transfer enqueue, cancel and
+recovery sweep.  ``EngineInstance`` provides one; the synchronous
+event-loop ``Cluster`` ignores it entirely (single-threaded access).
 """
 from __future__ import annotations
 
