@@ -46,6 +46,10 @@ from repro.runtime.workload import generate
 # to whatever the emulated NVLink time happens to be (~microseconds)
 TARGET_DELAY_S = 0.6
 N_REQS = 8
+# shared by every cluster below AND the _delay_scale probe, so the
+# probe's send_kv call computes exactly the delay the engines emulate
+CHUNK_SIZE = 16
+PAGE_SIZE = 16
 
 
 def _setup():
@@ -59,16 +63,26 @@ def _setup():
 
 def _delay_scale(cfg, reqs):
     """Scale factor that stretches the median request's emulated
-    transfer time to TARGET_DELAY_S (throwaway stack: counters local)."""
+    transfer time to TARGET_DELAY_S (throwaway stack: counters local).
+
+    The runtime sleeps the delay the prefill engine computed at finish
+    (``prefill_engine._finish_paged``), so the probe must issue the
+    SAME ``send_kv`` call — paged payload, chunked prefill, no prefix
+    cache — or the injected per-request delay drifts from the target."""
     probe = NetworkStack()
-    ts = sorted(probe.send_kv(cfg, r.prompt_len, page_size=16)
-                for r in reqs)
+    ts = sorted(
+        probe.send_kv(cfg, r.prompt_len,
+                      n_chunks=-(-r.prompt_len // CHUNK_SIZE),
+                      page_size=PAGE_SIZE,
+                      enc_len=cfg.cross_ctx, cached_tokens=0)
+        for r in reqs)
     return TARGET_DELAY_S / max(1e-9, ts[len(ts) // 2])
 
 
 def _sync_reference(cfg, params, reqs):
     from repro.serving import Cluster
-    cl = Cluster(cfg, runtime="engine", params=params, chunk_size=16,
+    cl = Cluster(cfg, runtime="engine", params=params,
+                 chunk_size=CHUNK_SIZE, page_size=PAGE_SIZE,
                  max_seq=128, max_batch=8, n_pages=256,
                  n_prefill=2, n_decode=2)
     handles = [cl.submit(request=r) for r in copy.deepcopy(reqs)]
@@ -78,7 +92,8 @@ def _sync_reference(cfg, params, reqs):
 
 def _async_run(cfg, params, reqs, *, overlap, scale):
     from repro.serving import AsyncCluster
-    with AsyncCluster(cfg, params=params, chunk_size=16, max_seq=128,
+    with AsyncCluster(cfg, params=params, chunk_size=CHUNK_SIZE,
+                      page_size=PAGE_SIZE, max_seq=128,
                       max_batch=8, n_pages=256, n_prefill=2, n_decode=2,
                       overlap_transfer=overlap,
                       transfer_delay_scale=scale) as ac:
@@ -129,7 +144,8 @@ def _overlap_scenario(cfg, params, reqs):
 def _open_loop_scenario(cfg, params, reqs):
     from repro.serving import ArrivalSchedule, AsyncCluster, OpenLoopClient
     sched = ArrivalSchedule(process="poisson", rate=100.0, seed=0)
-    with AsyncCluster(cfg, params=params, chunk_size=16, max_seq=128,
+    with AsyncCluster(cfg, params=params, chunk_size=CHUNK_SIZE,
+                      page_size=PAGE_SIZE, max_seq=128,
                       max_batch=8, n_pages=256,
                       n_prefill=2, n_decode=2) as ac:
         t0 = time.perf_counter()

@@ -74,8 +74,11 @@ class OpenLoopClient:
     so the client drives ``AsyncCluster`` and (for schedule debugging)
     the synchronous ``Cluster`` alike.  ``start()`` launches the
     submission thread; ``join()`` waits for the LAST submission (not
-    for completions — drain the cluster for that); ``handles`` collects
-    the returned streaming handles in submission order.
+    for completions — drain the cluster for that) and re-raises any
+    submission failure (a ``submit()`` exception stops the schedule;
+    it is recorded on ``error`` and surfaced instead of silently
+    dropping the remaining arrivals); ``handles`` collects the
+    returned streaming handles in submission order.
     """
 
     def __init__(self, cluster, requests: Sequence[Request],
@@ -90,6 +93,7 @@ class OpenLoopClient:
         self._stop = threading.Event()
         self.handles: List[object] = []
         self.submitted = 0
+        self.error: Optional[Exception] = None
 
     def start(self) -> "OpenLoopClient":
         assert self._thread is None, "client already started"
@@ -100,23 +104,34 @@ class OpenLoopClient:
 
     def _run(self) -> None:
         t0 = time.monotonic()
-        for req, off in zip(self._requests, self._offsets):
-            # sleep to the arrival instant; an overloaded submit path
-            # makes us late, never early — open loop, no back-pressure
-            delay = t0 + float(off) - time.monotonic()
-            if delay > 0 and self._stop.wait(delay):
-                return
-            if self._stop.is_set():
-                return
-            h = self._cluster.submit(request=req)
-            self.handles.append(h)
-            self.submitted += 1
-            if self._on_submit is not None:
-                self._on_submit(h)
+        try:
+            for req, off in zip(self._requests, self._offsets):
+                # sleep to the arrival instant; an overloaded submit
+                # path makes us late, never early — open loop, no
+                # back-pressure
+                delay = t0 + float(off) - time.monotonic()
+                if delay > 0 and self._stop.wait(delay):
+                    return
+                if self._stop.is_set():
+                    return
+                h = self._cluster.submit(request=req)
+                self.handles.append(h)
+                self.submitted += 1
+                if self._on_submit is not None:
+                    self._on_submit(h)
+        except Exception as e:
+            self.error = e    # re-raised by join()/stop()
+
+    def _check(self) -> None:
+        if self.error is not None:
+            raise RuntimeError(
+                f"open-loop client died after {self.submitted}/"
+                f"{len(self._requests)} submissions") from self.error
 
     def join(self, timeout: Optional[float] = None) -> None:
         assert self._thread is not None, "client never started"
         self._thread.join(timeout)
+        self._check()
 
     def stop(self) -> None:
         """Abort remaining submissions (already-submitted requests keep
@@ -124,3 +139,4 @@ class OpenLoopClient:
         self._stop.set()
         if self._thread is not None:
             self._thread.join()
+            self._check()

@@ -518,11 +518,6 @@ class AsyncCluster:
             if p.iid in self._dead:
                 return        # crashed mid-step: completions are lost
             for oc in outcomes:
-                # the engine stamped t_first_token with the step's START
-                # time (the event-loop convention, where the step's
-                # duration is billed by the clock); wall-clock TTFT is
-                # honest only if it includes the chunk's execution time
-                oc.req.t_first_token = self.now()
                 self._on_prefill_outcome(oc, xfer)
             if not ran:
                 wake.wait(self.poll_interval_s)
@@ -534,6 +529,13 @@ class AsyncCluster:
         with self._lock:
             if req.rid in self._cancelled or req.phase in TERMINAL_PHASES:
                 return
+            # the engine stamped t_first_token with the step's START
+            # time (the event-loop convention, where the step's
+            # duration is billed by the clock); wall-clock TTFT is
+            # honest only if it includes the chunk's execution time —
+            # restamped here, under the lock, so a request cancelled
+            # mid-prefill keeps its terminal timestamps untouched
+            req.t_first_token = self.now()
             attempt = req.retries
         self._stream(req.rid, oc.first_token)
         self._predict(req)
@@ -584,7 +586,18 @@ class AsyncCluster:
                 cached_tokens=req.cached_prefix_tokens)
         delay *= self.transfer_delay_scale
         while not self._stop.is_set():
-            req.phase = Phase.TRANSFER
+            with self._lock:
+                # phase write and its guard are one atomic section: a
+                # cancel()/_fail()/_recover() racing with this worker
+                # either lands first (we observe it here and bail) or
+                # lands after (overwriting TRANSFER with its terminal/
+                # WAITING phase) — a terminal phase is never clobbered
+                # back to TRANSFER, preserving the zero-wedge guarantee
+                if req.rid in self._cancelled \
+                        or req.phase in TERMINAL_PHASES \
+                        or req.retries != attempt:
+                    return
+                req.phase = Phase.TRANSFER
             if self.fault_plane is None:
                 outcome = OK
             else:

@@ -193,6 +193,61 @@ def test_open_loop_client_drives_async_cluster(engine_setup):
         _assert_no_leaks(ac)
 
 
+def test_open_loop_client_surfaces_submit_errors():
+    """A submit() exception must not die silently on the client thread:
+    join() re-raises it (chained), and ``submitted`` stops at the last
+    successful submission."""
+
+    class BoomCluster:
+        def __init__(self):
+            self.n = 0
+
+        def submit(self, request=None):
+            self.n += 1
+            if self.n > 2:
+                raise ValueError("backend gone")
+            return object()
+
+    reqs = [Request(rid=f"e{i}", prompt_len=4, decode_len=2)
+            for i in range(5)]
+    sched = ArrivalSchedule(process="poisson", rate=1000.0, seed=0)
+    client = OpenLoopClient(BoomCluster(), reqs, sched).start()
+    with pytest.raises(RuntimeError, match="open-loop client died"):
+        client.join(timeout=30)
+    assert client.submitted == 2
+    assert isinstance(client.error, ValueError)
+
+
+def test_transfer_never_clobbers_terminal_phase(engine_setup):
+    """Regression: ``_transfer`` must not write ``Phase.TRANSFER`` over
+    a request that went terminal (or was superseded by a recovery
+    re-prefill) between the prefill outcome and the transfer worker
+    picking it up — a clobbered CANCELLED request never reaches a
+    terminal phase again and wedges ``drain()`` forever."""
+    from repro.serving.runtime import PrefillOutcome
+    cfg, params = engine_setup
+    ac = _async_cluster(cfg, params, n_prefill=1, n_decode=1)
+    try:
+        cancelled = Request(rid="race0", prompt_len=8, decode_len=4)
+        cancelled.phase = Phase.CANCELLED
+        cancelled.t_finish = 0.5
+        ac._reqs[cancelled.rid] = cancelled
+        ac._cancelled.add(cancelled.rid)
+        ac._transfer(PrefillOutcome(req=cancelled, first_token=1,
+                                    transfer_delay_s=0.0), 0)
+        assert cancelled.phase == Phase.CANCELLED
+        assert cancelled.t_finish == 0.5
+
+        stale = Request(rid="race1", prompt_len=8, decode_len=4)
+        stale.retries = 1          # a recovery superseded attempt 0
+        ac._reqs[stale.rid] = stale
+        ac._transfer(PrefillOutcome(req=stale, first_token=1,
+                                    transfer_delay_s=0.0), 0)
+        assert stale.phase == Phase.WAITING
+    finally:
+        ac.close()
+
+
 # -- on-device sampling ------------------------------------------------------
 def test_sample_tokens_greedy_lanes_exact():
     import jax.numpy as jnp
