@@ -178,11 +178,14 @@ def _serve_cluster(cfg, params, reqs, *, n_prefill=2, n_decode=2):
     }
 
 
-def _serve_chaos():
+def _serve_chaos(trace_out=None):
     """Failure-free vs seeded-chaos run of the SAME sim-runtime cluster
     workload (OPT-13B cost model, 2 prefill + 2 decode): what recovery
-    costs in TTFT/JCT, and that chaos runs drain to terminal phases."""
+    costs in TTFT/JCT, and that chaos runs drain to terminal phases.
+    ``trace_out`` additionally traces the chaos run (repro.obs) and
+    writes a Perfetto ``trace_event`` JSON artifact of it."""
     from repro.configs import get_config
+    from repro.obs import Tracer, validate_chains, validate_perfetto
     from repro.runtime.costmodel import CostModel, HardwareSpec
     from repro.runtime.request import TERMINAL_PHASES
     from repro.serving import Cluster, FaultEvent, FaultSpec
@@ -192,9 +195,10 @@ def _serve_chaos():
                      n_params=13_000_000_000)
     reqs = generate("Mixed", 64, seed=1)
 
-    def one(faults):
+    def one(faults, tracer=None):
         cl = Cluster(cfg, runtime="sim", cost=cost,
-                     n_prefill=2, n_decode=2, faults=faults)
+                     n_prefill=2, n_decode=2, faults=faults,
+                     tracer=tracer)
         t0 = time.perf_counter()
         r = cl.serve(copy.deepcopy(reqs))
         wall = time.perf_counter() - t0
@@ -205,7 +209,13 @@ def _serve_chaos():
     _, base, base_wall = one(None)
     spec = FaultSpec(seed=0, drop_kv=0.1, events=(
         FaultEvent(t=2.0, kind=CRASH, iid="i3"),))
-    cl, chaos, chaos_wall = one(spec)
+    tracer = Tracer() if trace_out else None
+    cl, chaos, chaos_wall = one(spec, tracer)
+    if tracer is not None:
+        errs = validate_chains(tracer.events) \
+            + validate_perfetto(tracer.to_perfetto())
+        assert not errs, f"chaos trace invalid: {errs[:3]}"
+        tracer.write_perfetto(trace_out)
     return {
         "workload": "Mixed64/opt_13b (sim runtime, 2p+2d)",
         "baseline": {"wall_s": round(base_wall, 4),
@@ -228,6 +238,57 @@ def _serve_chaos():
     }
 
 
+def _serve_obs_overhead():
+    """Observability-cost anchor (docs/observability.md): the same
+    fixed-seed chaos sim workload with the obs plane OFF vs fully ON
+    (tracer + metrics registry).  The run's metrics must be
+    byte-identical either way, and baselines.json gates
+    ``overhead_ratio`` at <= 1.05x."""
+    from repro.configs import get_config
+    from repro.obs import MetricsRegistry, Tracer
+    from repro.runtime.costmodel import CostModel, HardwareSpec
+    from repro.serving import Cluster, FaultEvent, FaultSpec
+    from repro.serving.faults import CRASH
+    cfg = get_config("opt_13b")
+    cost = CostModel(cfg, HardwareSpec.v100_tp2(),
+                     n_params=13_000_000_000)
+    reqs = generate("Mixed", 128, seed=3)
+    spec = FaultSpec(seed=0, drop_kv=0.05, events=(
+        FaultEvent(t=2.0, kind=CRASH, iid="i3"),))
+
+    def one(tracer, metrics):
+        cl = Cluster(cfg, runtime="sim", cost=cost, n_prefill=2,
+                     n_decode=2, faults=spec, tracer=tracer,
+                     metrics=metrics)
+        t0 = time.perf_counter()
+        r = cl.serve(copy.deepcopy(reqs))
+        return time.perf_counter() - t0, r
+
+    # best-of-3 walls damp scheduler noise on shared CI runners
+    off_walls, on_walls = [], []
+    off_res = on_res = None
+    n_events = 0
+    for _ in range(3):
+        w, off_res = one(None, None)
+        off_walls.append(w)
+        tracer, metrics = Tracer(), MetricsRegistry()
+        w, on_res = one(tracer, metrics)
+        on_walls.append(w)
+        n_events = len(tracer.events)
+    assert json.dumps(off_res.metrics, sort_keys=True) == \
+        json.dumps(on_res.metrics, sort_keys=True), \
+        "observability changed the run's metrics"
+    off_best, on_best = min(off_walls), min(on_walls)
+    return {
+        "workload": "Mixed128/opt_13b (sim runtime, 2p+2d, chaos)",
+        "wall_off_s": round(off_best, 4),
+        "wall_on_s": round(on_best, 4),
+        "trace_events": n_events,
+        "metrics_identical": 1.0,
+        "overhead_ratio": round(on_best / max(1e-9, off_best), 4),
+    }
+
+
 def _scenarios():
     gqa = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
                               dtype="float32")
@@ -244,13 +305,13 @@ def _scenarios():
             ("encdec", encdec, 4, 5)]
 
 
-def run(out_path=None, scenarios=None):
+def run(out_path=None, scenarios=None, trace_out=None):
     report = {}
     rows = []
     all_scenarios = _scenarios()
     if scenarios:
         known = {name for name, *_ in all_scenarios} | {
-            "cluster", "chaos", "prefix_cache"}
+            "cluster", "chaos", "prefix_cache", "obs_overhead"}
         unknown = set(scenarios) - known
         if unknown:
             raise SystemExit(f"unknown scenarios {sorted(unknown)}; "
@@ -324,7 +385,7 @@ def run(out_path=None, scenarios=None):
                      f"kv_bytes_ratio={pres['kv_bytes_ratio']};"
                      f"chunks_saved={pres['chunks_saved']}"))
     if not scenarios or "chaos" in scenarios:
-        cres = _serve_chaos()
+        cres = _serve_chaos(trace_out=trace_out)
         report["chaos"] = cres
         ch = cres["chaos"]
         rows.append(("paged_serving_chaos_recovered_jct",
@@ -333,6 +394,14 @@ def run(out_path=None, scenarios=None):
                      f"failed={ch['failed']};"
                      f"retransmits={ch['kv_retransmits']};"
                      f"jct_overhead={cres['recovery_jct_overhead']}"))
+    if not scenarios or "obs_overhead" in scenarios:
+        ores = _serve_obs_overhead()
+        report["obs_overhead"] = ores
+        rows.append(("paged_serving_obs_overhead",
+                     ores["overhead_ratio"],
+                     f"off={ores['wall_off_s']};"
+                     f"on={ores['wall_on_s']};"
+                     f"events={ores['trace_events']}"))
     print(json.dumps(report))
     if out_path:
         with open(out_path, "w") as f:
@@ -348,6 +417,9 @@ if __name__ == "__main__":
     ap.add_argument("--scenarios", default=None,
                     help="comma-separated subset, e.g. 'gqa,encdec' "
                          "(default: all)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the chaos scenario "
+                         "to this path (CI uploads it as TRACE_*)")
     args = ap.parse_args()
     run(args.out, scenarios=args.scenarios.split(",")
-        if args.scenarios else None)
+        if args.scenarios else None, trace_out=args.trace_out)

@@ -141,13 +141,15 @@ def _overlap_scenario(cfg, params, reqs):
     }
 
 
-def _open_loop_scenario(cfg, params, reqs):
+def _open_loop_scenario(cfg, params, reqs, trace_out=None):
+    from repro.obs import Tracer, validate_chains, validate_perfetto
     from repro.serving import ArrivalSchedule, AsyncCluster, OpenLoopClient
     sched = ArrivalSchedule(process="poisson", rate=100.0, seed=0)
+    tracer = Tracer(clock="wall") if trace_out else None
     with AsyncCluster(cfg, params=params, chunk_size=CHUNK_SIZE,
                       page_size=PAGE_SIZE, max_seq=128,
                       max_batch=8, n_pages=256,
-                      n_prefill=2, n_decode=2) as ac:
+                      n_prefill=2, n_decode=2, tracer=tracer) as ac:
         t0 = time.perf_counter()
         client = OpenLoopClient(ac, copy.deepcopy(reqs), sched).start()
         client.join(timeout=120)
@@ -157,6 +159,13 @@ def _open_loop_scenario(cfg, params, reqs):
         m = ac.result([h.request for h in client.handles]).metrics
         toks = sum(len(h.result(wait=False).tokens)
                    for h in client.handles)
+    if tracer is not None:
+        errs = (validate_chains(tracer.events)
+                + validate_perfetto(tracer.to_perfetto()))
+        assert not errs, f"open-loop trace invalid: {errs[:5]}"
+        tracer.write_perfetto(trace_out)
+        print(f"wrote Perfetto trace ({len(tracer)} events) -> "
+              f"{trace_out}")
     return {
         "arrivals": "poisson @ 100 req/s (seed 0)",
         "requests": m["n"],
@@ -169,10 +178,11 @@ def _open_loop_scenario(cfg, params, reqs):
     }
 
 
-def run(out_path=None):
+def run(out_path=None, trace_out=None):
     cfg, params, reqs = _setup()
     overlap = _overlap_scenario(cfg, params, reqs)
-    open_loop = _open_loop_scenario(cfg, params, reqs)
+    open_loop = _open_loop_scenario(cfg, params, reqs,
+                                    trace_out=trace_out)
     report = {"overlap": overlap, "open_loop": open_loop}
     rows = [
         ("wallclock_overlap",
@@ -200,5 +210,9 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None,
                     help="also write the JSON report to this path "
                          "(CI uploads it as the BENCH_* artifact)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the open-loop "
+                         "scenario to this path (CI uploads it as "
+                         "TRACE_*)")
     args = ap.parse_args()
-    run(args.out)
+    run(args.out, trace_out=args.trace_out)

@@ -21,6 +21,7 @@ from repro.core.kv_transfer import (TS_ICI, TS_NVLINK, TS_ROCE, TS_SOCKET,
                                     NetworkStack)
 from repro.fleet.profile import EventLoopProfiler
 from repro.fleet.traces import Trace
+from repro.obs.slo import SLOSpec, good_count
 from repro.runtime.costmodel import CostModel, HardwareSpec
 from repro.runtime.request import Phase, Request
 from repro.serving.cluster import Cluster
@@ -59,11 +60,17 @@ class FleetSpec:
     slo_tbt_s: float = 0.25
 
     @property
+    def slo(self) -> SLOSpec:
+        """The spec's SLO targets as the shared ``repro.obs`` type."""
+        return SLOSpec(ttft_target_s=self.slo_ttft_s,
+                       tbt_target_s=self.slo_tbt_s)
+
+    @property
     def n_instances(self) -> int:
         return self.n_prefill + self.n_decode
 
     def build_cluster(self, *, network: Optional[NetworkStack] = None,
-                      faults=None) -> Cluster:
+                      faults=None, tracer=None, metrics=None) -> Cluster:
         cfg = get_config(self.model)
         cost = CostModel(cfg, HARDWARE[self.hardware](),
                          n_params=self.n_params)
@@ -79,7 +86,8 @@ class FleetSpec:
             max_batch=self.max_batch, enable_flip=self.enable_flip,
             flip_idle_s=self.flip_idle_s,
             monitor_interval_s=self.monitor_interval_s,
-            collect_tokens=self.collect_tokens, faults=faults)
+            collect_tokens=self.collect_tokens, faults=faults,
+            tracer=tracer, metrics=metrics)
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -111,29 +119,18 @@ def page_leaks(cluster: Cluster) -> int:
                for i in cluster.instances)
 
 
-def _goodput(reqs: List[Request], spec: FleetSpec) -> int:
-    """DistServe-style SLO attainment: a request counts toward goodput
-    iff it finished, its TTFT met the TTFT SLO, and its average
-    time-between-tokens met the TBT SLO."""
-    good = 0
-    for r in reqs:
-        if r.phase is not Phase.FINISHED:
-            continue
-        if r.ttft > spec.slo_ttft_s:
-            continue
-        tbt = (r.t_finish - r.t_first_token) / max(1, r.generated)
-        if tbt <= spec.slo_tbt_s:
-            good += 1
-    return good
-
-
 def run_fleet(trace: Union[Trace, List[Request]], spec: FleetSpec, *,
               profile: bool = False,
               network: Optional[NetworkStack] = None,
-              faults=None) -> FleetReport:
-    """Replay ``trace`` through a ``spec`` cluster and report."""
+              faults=None, tracer=None, metrics=None) -> FleetReport:
+    """Replay ``trace`` through a ``spec`` cluster and report.
+
+    ``tracer``/``metrics`` (repro.obs) attach the observability plane
+    to the underlying cluster — off by default, so the events/sec
+    throughput floor is measured with zero instrumentation cost."""
     reqs = trace.to_requests() if isinstance(trace, Trace) else trace
-    cluster = spec.build_cluster(network=network, faults=faults)
+    cluster = spec.build_cluster(network=network, faults=faults,
+                                 tracer=tracer, metrics=metrics)
     profiler = EventLoopProfiler() if profile else None
     cluster.profiler = profiler
     t0 = perf_counter()
@@ -146,7 +143,7 @@ def run_fleet(trace: Union[Trace, List[Request]], spec: FleetSpec, *,
 
     finished = sum(1 for r in reqs if r.phase is Phase.FINISHED)
     failed = sum(1 for r in reqs if r.phase is Phase.FAILED)
-    good = _goodput(reqs, spec)
+    good = good_count(reqs, spec.slo)
     makespan = result.metrics.get("makespan", 0.0)
     return FleetReport(
         metrics=result.metrics,

@@ -7,9 +7,15 @@ unified serving API (repro.serving.Cluster — see docs/serving_api.md).
   PYTHONPATH=src python -m repro.launch.serve --real   # tiny model, CPU
   PYTHONPATH=src python -m repro.launch.serve --wall-clock \\
       --arrival-rate 20 --arrival-process poisson --requests 12
+
+Observability (docs/observability.md): ``--trace-out t.json`` writes a
+Perfetto-loadable trace, ``--trace-jsonl t.jsonl`` the raw records,
+``--metrics-out m.json`` a metrics-registry snapshot, and
+``--slo-ttft``/``--slo-tbt`` add SLO attainment to the summary.
 """
 import argparse
 import copy
+import json
 
 
 def _print_result(args, r):
@@ -19,10 +25,46 @@ def _print_result(args, r):
     print(f"avg JCT  {m['avg_jct']:.3f}s  p90 {m['p90_jct']:.3f}s")
     if "avg_transfer" in m:
         print(f"avg KV transfer {m['avg_transfer']*1e3:.3f}ms")
+    if "goodput" in m:
+        print(f"SLO goodput {m['goodput']:.3f} "
+              f"({m['slo_good']} in-SLO; ttft<={m['slo_ttft_s']}s "
+              f"tbt<={m['slo_tbt_s']}s)")
     print(f"resource time {r.resource_time:.1f}s "
           f"(prefill {r.prefill_busy:.1f} decode {r.decode_busy:.1f})  "
           f"perf/$ {r.perf_per_dollar:.3f} req/inst-s  flips={r.flips} "
           f"swaps={r.swap_events}")
+
+
+def _obs_from_args(args, clock):
+    """Build the (tracer, metrics, slo) triple the CLI flags ask for."""
+    from repro.obs import MetricsRegistry, SLOSpec, Tracer
+    tracer = Tracer(clock=clock) \
+        if (args.trace_out or args.trace_jsonl) else None
+    metrics = MetricsRegistry() if args.metrics_out else None
+    slo = None
+    if args.slo_ttft is not None or args.slo_tbt is not None:
+        kw = {}
+        if args.slo_ttft is not None:
+            kw["ttft_target_s"] = args.slo_ttft
+        if args.slo_tbt is not None:
+            kw["tbt_target_s"] = args.slo_tbt
+        slo = SLOSpec(**kw)
+    return tracer, metrics, slo
+
+
+def _dump_obs(args, tracer, metrics):
+    if tracer is not None:
+        if args.trace_out:
+            tracer.write_perfetto(args.trace_out)
+            print(f"wrote Perfetto trace ({len(tracer)} events) -> "
+                  f"{args.trace_out}")
+        if args.trace_jsonl:
+            tracer.write_jsonl(args.trace_jsonl)
+            print(f"wrote JSONL trace -> {args.trace_jsonl}")
+    if metrics is not None and args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(metrics.snapshot(), f, indent=2, default=str)
+        print(f"wrote metrics snapshot -> {args.metrics_out}")
 
 
 def _run_real(args):
@@ -43,20 +85,23 @@ def _run_real(args):
     reqs = generate(args.workload, min(args.requests, 16), seed=0,
                     max_prompt=48, max_decode=12,
                     vocab_size=cfg.vocab_size)
+    tracer, metrics, slo = _obs_from_args(args, clock="virtual")
     cluster = Cluster(cfg, runtime="engine", params=params,
                       n_prefill=args.n_prefill, n_decode=args.n_decode,
                       prefill_policy=args.prefill_policy,
                       decode_policy=args.decode_policy,
                       dispatch_policy=args.dispatch,
                       chunk_size=16, max_seq=128,
-                      enable_flip=args.flip, flip_idle_s=1.0)
+                      enable_flip=args.flip, flip_idle_s=1.0,
+                      tracer=tracer, metrics=metrics)
     handles = [cluster.submit(request=r) for r in reqs]
     cluster.run()
     for h in handles[:4]:
         res = h.result()
         print(f"  {res.rid}: {len(res.tokens)} tokens "
               f"{res.tokens[:8]}{'...' if len(res.tokens) > 8 else ''}")
-    _print_result(args, cluster.result())
+    _print_result(args, cluster.result(slo=slo))
+    _dump_obs(args, tracer, metrics)
 
 
 def _run_wall_clock(args):
@@ -82,13 +127,15 @@ def _run_wall_clock(args):
     sched = ArrivalSchedule(process=args.arrival_process,
                             rate=args.arrival_rate, seed=0,
                             period_s=args.arrival_period)
+    tracer, metrics, slo = _obs_from_args(args, clock="wall")
     with AsyncCluster(cfg, params=params,
                       n_prefill=args.n_prefill, n_decode=args.n_decode,
                       prefill_policy=args.prefill_policy,
                       decode_policy=args.decode_policy,
                       dispatch_policy=args.dispatch,
                       chunk_size=16, max_seq=128,
-                      overlap_transfer=args.overlap) as cluster:
+                      overlap_transfer=args.overlap,
+                      tracer=tracer, metrics=metrics) as cluster:
         client = OpenLoopClient(cluster, reqs, sched).start()
         client.join()
         ok = cluster.drain(timeout=600)
@@ -97,7 +144,7 @@ def _run_wall_clock(args):
             res = h.result(wait=False)
             print(f"  {res.rid}: {len(res.tokens)} tokens "
                   f"ttft={res.ttft:.3f}s jct={res.jct:.3f}s")
-        r = cluster.result(reqs)
+        r = cluster.result(reqs, slo=slo)
     m = r.metrics
     print(f"open-loop {args.arrival_process} @ {args.arrival_rate} req/s"
           f"  overlap_transfer={args.overlap}")
@@ -105,6 +152,9 @@ def _run_wall_clock(args):
           f"avg JCT {m['avg_jct']:.3f}s  (wall seconds)")
     print(f"makespan {m['makespan']:.2f}s  "
           f"throughput {m['n'] / m['makespan']:.2f} req/s")
+    if "goodput" in m:
+        print(f"SLO goodput {m['goodput']:.3f} ({m['slo_good']} in-SLO)")
+    _dump_obs(args, tracer, metrics)
 
 
 def main():
@@ -141,6 +191,20 @@ def main():
                     default=True,
                     help="overlap KV transfer with the next prefill "
                          "chunk (--no-overlap serializes, the ablation)")
+    # -- observability (docs/observability.md) --------------------------
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON "
+                         "(open at https://ui.perfetto.dev)")
+    ap.add_argument("--trace-jsonl", default=None, metavar="PATH",
+                    help="write the raw trace records as JSONL")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics-registry snapshot JSON "
+                         "(counters, histograms, per-instance probes)")
+    ap.add_argument("--slo-ttft", type=float, default=None,
+                    help="TTFT SLO target in seconds (adds goodput "
+                         "to the summary)")
+    ap.add_argument("--slo-tbt", type=float, default=None,
+                    help="avg time-between-tokens SLO target in seconds")
     args = ap.parse_args()
 
     if args.wall_clock:
@@ -158,14 +222,17 @@ def main():
     cfg = get_config(args.arch)
     cost = CostModel(cfg, HardwareSpec.v100_tp2())
     reqs = generate(args.workload, args.requests, seed=0)
+    tracer, metrics, slo = _obs_from_args(args, clock="virtual")
     r = Cluster(
         cfg, runtime="sim", cost=cost,
         n_prefill=args.n_prefill, n_decode=args.n_decode,
         prefill_policy=args.prefill_policy,
         decode_policy=args.decode_policy, dispatch_policy=args.dispatch,
         max_batch=64, enable_flip=args.flip, flip_idle_s=1.0,
-    ).serve(copy.deepcopy(reqs))
+        tracer=tracer, metrics=metrics,
+    ).serve(copy.deepcopy(reqs), slo=slo)
     _print_result(args, r)
+    _dump_obs(args, tracer, metrics)
 
 
 if __name__ == "__main__":

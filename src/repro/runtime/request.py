@@ -151,13 +151,33 @@ class Request:
         return self.decode_len > thresh
 
 
-def summarize(reqs: List[Request]) -> dict:
+def summarize(reqs: List[Request], slo=None) -> dict:
+    """Aggregate metrics over a run's requests.
+
+    ``slo`` (a ``repro.obs.slo.SLOSpec``) additionally reports SLO
+    attainment/goodput; with ``slo=None`` (the default) the output is
+    byte-identical to the pre-SLO summaries, which fixed-seed golden
+    tests pin exactly.
+    """
     done = [r for r in reqs if r.phase == Phase.FINISHED]
     failed = [r for r in reqs if r.phase == Phase.FAILED]
     if not done:
         out = {"n": 0}
         if failed:
             out["failed"] = len(failed)
+            # all-failed diagnostics, guarded only-when-nonzero: a run
+            # where every request failed before first token (e.g. total
+            # capacity loss) previously summarized to just {"n": 0,
+            # "failed": k} with no latency/retry signal at all
+            fttfts = [r.ttft for r in failed if r.t_first_token >= 0]
+            if fttfts:
+                out["failed_avg_ttft"] = float(np.mean(fttfts))
+            retries = sum(r.retries for r in failed)
+            if retries:
+                out["failed_retries"] = retries
+        if slo is not None:
+            from repro.obs.slo import attainment
+            out.update(attainment(reqs, slo))
         return out
     ttfts = np.array([r.ttft for r in done])
     jcts = np.array([r.jct for r in done])
@@ -195,4 +215,9 @@ def summarize(reqs: List[Request]) -> dict:
         out["cache_hit_rate"] = float(
             sum(r.cached_prefix_tokens for r in done)
             / sum(r.prompt_len for r in done))
+    # SLO attainment (docs/observability.md) — opt-in via ``slo=``, so
+    # the default output stays byte-identical to the golden metrics
+    if slo is not None:
+        from repro.obs.slo import attainment
+        out.update(attainment(reqs, slo))
     return out

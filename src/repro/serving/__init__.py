@@ -17,7 +17,14 @@ the same engine instances on concurrent worker threads with overlapped
 KV transfer, measured in real seconds; ``OpenLoopClient`` +
 ``ArrivalSchedule`` submit on Poisson/bursty/diurnal wall-clock
 schedules.
+
+Observability (docs/observability.md): pass ``tracer=Tracer()`` and/or
+``metrics=MetricsRegistry()`` to either cluster for per-request span
+timelines (JSONL + Perfetto export), live counters/histograms and SLO
+attainment (``SLOSpec`` via ``result(slo=...)``) — all zero-cost when
+left off.
 """
+from repro.obs import MetricsRegistry, SLOSpec, Tracer
 from repro.runtime.request import SamplingParams
 from repro.serving.arrivals import ArrivalSchedule, OpenLoopClient
 from repro.serving.async_runtime import AsyncCluster, AsyncRequestHandle
@@ -32,5 +39,5 @@ __all__ = [
     "SimResult", "SamplingParams", "FaultSpec", "FaultEvent",
     "RecoveryPolicy", "InstanceRuntime", "PrefillOutcome", "StepEvents",
     "AsyncCluster", "AsyncRequestHandle", "ArrivalSchedule",
-    "OpenLoopClient",
+    "OpenLoopClient", "Tracer", "MetricsRegistry", "SLOSpec",
 ]

@@ -61,6 +61,8 @@ from repro.core.predictor import OraclePredictor
 from repro.core.sched.dispatcher import DecodeLoad, Dispatcher
 from repro.core.sched.flip import Role
 from repro.core.sched.global_scheduler import GlobalScheduler
+from repro.obs.metrics import MetricsRegistry, observe_request
+from repro.obs.tracer import Tracer
 from repro.runtime.request import (TERMINAL_PHASES, Phase, Request,
                                    SamplingParams, summarize)
 from repro.serving.cluster import RequestResult, SimResult
@@ -198,7 +200,9 @@ class AsyncCluster:
                  transfer_delay_scale: float = 1.0,
                  collect_tokens: bool = True,
                  prefix_cache: bool = False,
-                 poll_interval_s: float = 0.001):
+                 poll_interval_s: float = 0.001,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         from repro.serving.engine_instance import EngineInstance
         self.cfg = cfg
         self.max_seq = max_seq
@@ -253,6 +257,25 @@ class AsyncCluster:
         self.fault_plane: Optional[FaultPlane] = \
             faults.plane() if faults is not None else None
         self._fault_timers: List[threading.Timer] = []
+
+        # -- observability plane (docs/observability.md) -----------------
+        # Same contract as the synchronous Cluster: the registry always
+        # exists (pull-probes are free until snapshot()), the tracer is
+        # optional and wall-clock-stamped.  Workers append concurrently
+        # — Tracer emission is a single list.append of a fresh dict,
+        # atomic under the GIL, so there is no lock on the hot path.
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None \
+            else MetricsRegistry(enabled=False)
+        self.metrics.register_probe("instances", self._instance_stats)
+        self.metrics.register_probe("network", lambda: {
+            "bytes_sent": self.network.bytes_sent,
+            "bytes_saved": self.network.bytes_saved,
+            "retransmits": self.network.retransmits})
+        #: optional per-step-kind instrumentation (repro.obs.profile.
+        #: EventLoopProfiler — construct with thread_safe=True here):
+        #: workers call record("prefill_step"/"decode_step", dt)
+        self.profiler = None
 
         # workers are created here, started lazily on first submit()
         self._wake: Dict[str, threading.Event] = \
@@ -370,6 +393,10 @@ class AsyncCluster:
             if req.phase not in TERMINAL_PHASES:
                 req.phase = Phase.CANCELLED
                 req.t_finish = self.now()
+                if self.tracer is not None:
+                    self.tracer.instant("cancelled", "cluster",
+                                        req.t_finish, rid=rid)
+                observe_request(self.metrics, req)
             self._cv.notify_all()
         return True
 
@@ -391,24 +418,26 @@ class AsyncCluster:
                               else min(0.1, remaining))
 
     def serve(self, requests: Sequence[Request],
-              timeout: Optional[float] = None) -> SimResult:
+              timeout: Optional[float] = None, slo=None) -> SimResult:
         """Batch API: submit pre-built requests now, drain, summarize.
         Unlike the sync cluster the wall clock cannot replay recorded
-        ``arrival`` offsets — use ``OpenLoopClient`` for paced load."""
+        ``arrival`` offsets — use ``OpenLoopClient`` for paced load.
+        ``slo`` (an ``SLOSpec``) adds attainment/goodput."""
         self.start()
         for r in requests:
             self.submit(request=r)
         ok = self.drain(timeout)
         assert ok, f"drain timed out after {timeout}s"
-        return self.result(list(requests))
+        return self.result(list(requests), slo=slo)
 
-    def result(self, requests: Optional[List[Request]] = None) -> SimResult:
+    def result(self, requests: Optional[List[Request]] = None,
+               slo=None) -> SimResult:
         reqs = requests if requests is not None \
             else list(self._reqs.values())
         pf = sum(i.busy for i in self._prefill_insts)
         db = sum(i.busy for i in self._decode_insts)
         return SimResult(
-            metrics=summarize(reqs), resource_time=pf + db,
+            metrics=summarize(reqs, slo=slo), resource_time=pf + db,
             prefill_busy=pf, decode_busy=db,
             swap_events=sum(i.swaps for i in self.instances),
             flips=0, requests=reqs)
@@ -416,6 +445,33 @@ class AsyncCluster:
     # -- internals ----------------------------------------------------------
     def _inst(self, iid: str) -> InstanceRuntime:
         return self._by_iid[iid]
+
+    def _health(self, iid: str) -> str:
+        if iid in self._dead:
+            return "dead"
+        if self.now() < self._hung_until.get(iid, -1.0):
+            return "hung"
+        return "alive"
+
+    def _instance_stats(self) -> Dict[str, dict]:
+        """Per-instance state — the ``"instances"`` pull-probe, same
+        shape as the synchronous cluster's (instance locks taken per
+        instance, so a mid-run snapshot sees step-consistent state)."""
+        snap: Dict[str, dict] = {}
+        for i in self.instances:
+            with i.lock:
+                load = i.decode_load()
+                snap[i.iid] = {
+                    "role": i.flip.role.value,
+                    "flip_state": i.flip.state.value,
+                    "health": self._health(i.iid),
+                    "running": i.running,
+                    "prefill_queued_tokens": i.prefill_queued_tokens(),
+                    "decode_queued": load.get("queued", 0),
+                    "decode_batch": load.get("batch", 0),
+                    "free_pages": load.get("free_pages", 0),
+                }
+        return snap
 
     def _stream(self, rid: str, tok: int) -> None:
         with self._cv:
@@ -438,7 +494,31 @@ class AsyncCluster:
             req.phase = Phase.FAILED
             req.error = reason
             req.t_finish = self.now()
+            if self.tracer is not None:
+                self.tracer.instant("failed", "cluster", req.t_finish,
+                                    rid=req.rid, reason=reason)
+            observe_request(self.metrics, req)
             self._cv.notify_all()
+
+    def _finish_obs(self, req: Request, iid: str) -> None:
+        """Terminal-success observability: close the request's span
+        chain (decode_queued → decode → ``finished`` instant) and feed
+        the latency histograms.  Called by the decode worker that
+        finished the request, AFTER its terminal phase is stamped, so
+        a racing ``cancel()`` can no longer emit a second terminal."""
+        tr = self.tracer
+        if tr is not None:
+            if req.t_transfer_done >= 0 and req.t_decode_start >= 0:
+                tr.span("decode_queued", iid, req.t_transfer_done,
+                        max(0.0,
+                            req.t_decode_start - req.t_transfer_done),
+                        rid=req.rid)
+            if req.t_decode_start >= 0:
+                tr.span("decode", iid, req.t_decode_start,
+                        max(0.0, req.t_finish - req.t_decode_start),
+                        rid=req.rid, generated=req.generated)
+            tr.instant("finished", iid, req.t_finish, rid=req.rid)
+        observe_request(self.metrics, req)
 
     # -- routing ------------------------------------------------------------
     def _route_prefill(self, req: Request) -> None:
@@ -512,19 +592,28 @@ class AsyncCluster:
                 return
             if self._paused(p.iid):
                 continue
+            obs = self.tracer is not None or self.profiler is not None
+            t0 = self.now() if obs else 0.0
             with p.lock:
                 ran = p.prefill_start(self.now()) is not None
                 outcomes = p.prefill_complete(self.now()) if ran else []
+            if obs and ran:
+                dt = self.now() - t0
+                if self.tracer is not None:
+                    self.tracer.span("prefill_chunk", p.iid, t0, dt)
+                if self.profiler is not None:
+                    self.profiler.record("prefill_step", dt)
             if p.iid in self._dead:
                 return        # crashed mid-step: completions are lost
             for oc in outcomes:
-                self._on_prefill_outcome(oc, xfer)
+                self._on_prefill_outcome(oc, xfer, p.iid)
             if not ran:
                 wake.wait(self.poll_interval_s)
                 wake.clear()
 
     def _on_prefill_outcome(self, oc: PrefillOutcome,
-                            xfer: Optional[_TransferWorker]) -> None:
+                            xfer: Optional[_TransferWorker],
+                            iid: str) -> None:
         req = oc.req
         with self._lock:
             if req.rid in self._cancelled or req.phase in TERMINAL_PHASES:
@@ -537,6 +626,15 @@ class AsyncCluster:
             # mid-prefill keeps its terminal timestamps untouched
             req.t_first_token = self.now()
             attempt = req.retries
+            if self.tracer is not None and req.t_prefill_start >= 0:
+                self.tracer.span(
+                    "queued", iid, req.arrival,
+                    max(0.0, req.t_prefill_start - req.arrival),
+                    rid=req.rid)
+                self.tracer.span(
+                    "prefill", iid, req.t_prefill_start,
+                    max(0.0, req.t_first_token - req.t_prefill_start),
+                    rid=req.rid, chunks=oc.n_chunks)
         self._stream(req.rid, oc.first_token)
         self._predict(req)
         if xfer is not None:
@@ -551,9 +649,17 @@ class AsyncCluster:
                 return
             if self._paused(d.iid):
                 continue
+            obs = self.tracer is not None or self.profiler is not None
+            t0 = self.now() if obs else 0.0
             with d.lock:
                 ran = d.decode_start(self.now()) is not None
                 ev = d.decode_complete(self.now()) if ran else None
+            if obs and ran:
+                dt = self.now() - t0
+                if self.tracer is not None:
+                    self.tracer.span("decode_step", d.iid, t0, dt)
+                if self.profiler is not None:
+                    self.profiler.record("decode_step", dt)
             if d.iid in self._dead:
                 return        # crashed mid-step: completions are lost
             if ev is not None:
@@ -561,6 +667,7 @@ class AsyncCluster:
                     # engine stamped t_finish with the step's start time;
                     # wall-clock JCT must include the final step itself
                     r.t_finish = self.now()
+                    self._finish_obs(r, d.iid)
                 for rid, tok in ev.stream:
                     self._stream(rid, tok)
             if ev is not None and (ev.stream or ev.finished):
@@ -598,6 +705,7 @@ class AsyncCluster:
                         or req.retries != attempt:
                     return
                 req.phase = Phase.TRANSFER
+            t_start = self.now() if self.tracer is not None else 0.0
             if self.fault_plane is None:
                 outcome = OK
             else:
@@ -645,6 +753,12 @@ class AsyncCluster:
                 else:
                     enqueued = False
             if enqueued:
+                if self.tracer is not None:
+                    self.tracer.span("transfer", did, t_start,
+                                     max(0.0, self.now() - t_start),
+                                     rid=req.rid, attempt=attempt)
+                if self.metrics.enabled:
+                    self.metrics.counter("kv_transfers").inc()
                 self._wake[did].set()
                 return
             attempt = self._bump_retry(req, f"decode target {did} lost")
@@ -663,12 +777,21 @@ class AsyncCluster:
                             f"({self.recovery.max_retries}) exhausted")
             return -1
         self.network.note_retransmit()
+        if self.tracer is not None:
+            self.tracer.instant("retransmit", "cluster", self.now(),
+                                rid=req.rid, why=why, attempt=attempt)
+        if self.metrics.enabled:
+            self.metrics.counter("kv_retransmits").inc()
         if self._stop.wait(self.recovery.backoff(attempt)):
             return -1
         return attempt
 
     # -- fault plane --------------------------------------------------------
     def _on_fault(self, ev) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(ev.kind, ev.iid, self.now())
+        if self.metrics.enabled:
+            self.metrics.counter(f"faults_{ev.kind}").inc()
         if ev.kind == CRASH:
             self._declare_dead(ev.iid, f"instance {ev.iid} died")
             return
@@ -696,6 +819,10 @@ class AsyncCluster:
             if iid in self._dead:
                 return
             self._dead.add(iid)
+        if self.tracer is not None:
+            self.tracer.instant("declared_dead", iid, self.now())
+        if self.metrics.enabled:
+            self.metrics.counter("instances_declared_dead").inc()
         self._wake[iid].set()
         inst = self._inst(iid)
         with inst.lock:
@@ -730,6 +857,12 @@ class AsyncCluster:
                 buf = self._buffers.get(req.rid)
                 if buf is not None:
                     del buf[:]    # the retried attempt refills the stream
+                if self.tracer is not None:
+                    self.tracer.instant("recovery", "cluster",
+                                        self.now(), rid=req.rid,
+                                        why=why, attempt=req.retries)
+                if self.metrics.enabled:
+                    self.metrics.counter("recoveries").inc()
         if budget_spent:
             self._fail(req, f"{why}; retry budget "
                             f"({self.recovery.max_retries}) exhausted")

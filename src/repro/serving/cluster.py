@@ -61,6 +61,8 @@ from repro.core.predictor import OraclePredictor
 from repro.core.sched.dispatcher import Dispatcher
 from repro.core.sched.flip import FlipState, Role
 from repro.core.sched.global_scheduler import ClusterMonitor, GlobalScheduler
+from repro.obs.metrics import MetricsRegistry, observe_request
+from repro.obs.tracer import Tracer
 from repro.runtime.request import (TERMINAL_PHASES, Phase, Request,
                                    SamplingParams, summarize)
 from repro.serving.faults import (CORRUPT, CRASH, DELAY, DROP, FaultPlane,
@@ -229,7 +231,9 @@ class Cluster:
                  recovery: Optional[RecoveryPolicy] = None,
                  monitor_interval_s: Optional[float] = None,
                  collect_tokens: bool = True,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         assert runtime in ("sim", "engine"), runtime
         self.cfg = cfg
         self.runtime = runtime
@@ -319,6 +323,22 @@ class Cluster:
         self._buffers: Dict[str, List[int]] = {}
         self._reqs: Dict[str, Request] = {}
         self._cancelled: set = set()
+
+        # -- observability plane (docs/observability.md) -----------------
+        # The registry always exists (probes are pull-only — free until
+        # snapshot()); event-driven metric sites check ``enabled``.  The
+        # tracer is optional and every emission site is one ``is not
+        # None`` branch, so tracing off stays off the hot path.
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None \
+            else MetricsRegistry(enabled=False)
+        self.metrics.register_probe("instances", self._instance_stats)
+        self.metrics.register_probe("network", lambda: {
+            "bytes_sent": self.network.bytes_sent,
+            "bytes_saved": self.network.bytes_saved,
+            "retransmits": self.network.retransmits})
+        # transfer-span start times, keyed (rid, attempt); tracer-only
+        self._xfer_t0: Dict[tuple, float] = {}
 
         # -- fault plane (docs/fault_tolerance.md) -----------------------
         self.faults = faults
@@ -451,6 +471,10 @@ class Cluster:
             inst.cancel(rid)
         req.phase = Phase.CANCELLED
         req.t_finish = self._now
+        if self.tracer is not None:
+            self.tracer.instant("cancelled", "cluster", self._now,
+                                rid=rid)
+        observe_request(self.metrics, req)
         return True
 
     def run(self) -> None:
@@ -458,17 +482,19 @@ class Cluster:
         while self._pump():
             pass
 
-    def serve(self, requests: List[Request]) -> SimResult:
+    def serve(self, requests: List[Request], slo=None) -> SimResult:
         """Batch API (and the ``DisaggSimulator`` compat path): submit
         pre-built requests, run to completion, summarize.  Shares
         ``_submit_request`` with ``submit()`` — duplicate rids are
-        rejected and each request gets its streaming buffer."""
+        rejected and each request gets its streaming buffer.  ``slo``
+        (an ``SLOSpec``) adds attainment/goodput to the metrics."""
         for r in requests:
             self._submit_request(r)
         self.run()
-        return self.result(requests)
+        return self.result(requests, slo=slo)
 
-    def result(self, requests: Optional[List[Request]] = None) -> SimResult:
+    def result(self, requests: Optional[List[Request]] = None,
+               slo=None) -> SimResult:
         reqs = requests if requests is not None \
             else list(self._reqs.values())
         pf = sum(i.busy for i in self.instances
@@ -476,7 +502,7 @@ class Cluster:
         db = sum(i.busy for i in self.instances
                  if i.flip.role == Role.DECODE)
         return SimResult(
-            metrics=summarize(reqs), resource_time=pf + db,
+            metrics=summarize(reqs, slo=slo), resource_time=pf + db,
             prefill_busy=pf, decode_busy=db,
             swap_events=sum(i.swaps for i in self.instances),
             flips=sum(i.flip.flips for i in self.instances),
@@ -534,6 +560,10 @@ class Cluster:
         return False
 
     def _on_fault(self, ev) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(ev.kind, ev.iid, self._now)
+        if self.metrics.enabled:
+            self.metrics.counter(f"faults_{ev.kind}").inc()
         if ev.kind == CRASH:
             self._crashed.add(ev.iid)
         else:  # HANG: freeze until t + duration (extends any prior hang)
@@ -549,6 +579,10 @@ class Cluster:
         instance) unless their retry budget is already spent."""
         self._dead.add(iid)
         self.monitor.forget(iid)
+        if self.tracer is not None:
+            self.tracer.instant("declared_dead", iid, self._now)
+        if self.metrics.enabled:
+            self.metrics.counter("instances_declared_dead").inc()
         inst = self._inst(iid)
         resident = inst.resident_requests()
         for req in resident:
@@ -566,6 +600,12 @@ class Cluster:
             self._fail(req, f"{why}; retry budget "
                             f"({self.recovery.max_retries}) exhausted")
             return
+        if self.tracer is not None:
+            self.tracer.instant("recovery", "cluster", self._now,
+                                rid=req.rid, why=why,
+                                attempt=req.retries)
+        if self.metrics.enabled:
+            self.metrics.counter("recoveries").inc()
         req.phase = Phase.WAITING
         req.prefilled = 0
         req.generated = 0
@@ -585,6 +625,10 @@ class Cluster:
         req.phase = Phase.FAILED
         req.error = reason
         req.t_finish = self._now
+        if self.tracer is not None:
+            self.tracer.instant("failed", "cluster", self._now,
+                                rid=req.rid, reason=reason)
+        observe_request(self.metrics, req)
 
     def _shed_unservable(self) -> None:
         """Graceful degradation: requests whose only possible servers
@@ -617,6 +661,8 @@ class Cluster:
             return
         p.running = True
         self._push(self._now + dur, "prefill_done", p.iid)
+        if self.tracer is not None:
+            self.tracer.span("prefill_chunk", p.iid, self._now, dur)
 
     def _predict(self, req: Request) -> None:
         if self.predictor is not None and req.predicted_bucket < 0:
@@ -646,6 +692,8 @@ class Cluster:
                 cached_tokens=req.cached_prefix_tokens)
         req.phase = Phase.TRANSFER
         attempt = req.retries
+        if self.tracer is not None:
+            self._xfer_t0[(req.rid, attempt)] = self._now
         if self.fault_plane is None:
             self._push(self._now + delay, "kv_arrive",
                        (oc, did, attempt, False))
@@ -670,6 +718,15 @@ class Cluster:
             if req.rid in self._cancelled:
                 continue
             self._stream(req.rid, oc.first_token)
+            if self.tracer is not None and req.t_prefill_start >= 0:
+                self.tracer.span(
+                    "queued", p.iid, req.arrival,
+                    max(0.0, req.t_prefill_start - req.arrival),
+                    rid=req.rid)
+                self.tracer.span(
+                    "prefill", p.iid, req.t_prefill_start,
+                    max(0.0, self._now - req.t_prefill_start),
+                    rid=req.rid, chunks=oc.n_chunks)
             self._predict(req)
             did = self._select_decode(loads, req)
             if did is None:
@@ -697,6 +754,13 @@ class Cluster:
                     oc, "payload corrupted" if corrupted
                     else f"decode target {did} lost")
                 return
+        if self.tracer is not None:
+            t0 = self._xfer_t0.pop((req.rid, attempt), None)
+            if t0 is not None:
+                self.tracer.span("transfer", did, t0, self._now - t0,
+                                 rid=req.rid, attempt=attempt)
+        if self.metrics.enabled:
+            self.metrics.counter("kv_transfers").inc()
         d = self._inst(did)
         d.decode_enqueue(oc, self._now)
         self._kick_decode(d)
@@ -720,6 +784,12 @@ class Cluster:
                             f"({self.recovery.max_retries}) exhausted")
             return
         self.network.note_retransmit()
+        if self.tracer is not None:
+            self.tracer.instant("retransmit", "cluster", self._now,
+                                rid=req.rid, why=why,
+                                attempt=req.retries)
+        if self.metrics.enabled:
+            self.metrics.counter("kv_retransmits").inc()
         self._push(self._now + self.recovery.backoff(req.retries),
                    "transfer_retry", oc)
 
@@ -747,13 +817,35 @@ class Cluster:
             return
         d.running = True
         self._push(self._now + dur, "decode_done", d.iid)
+        if self.tracer is not None:
+            self.tracer.span("decode_step", d.iid, self._now, dur)
 
     def _on_decode_done(self, d: InstanceRuntime):
         ev = d.decode_complete(self._now)
         for rid, tok in ev.stream:
             self._stream(rid, tok)
+        if self.tracer is not None or self.metrics.enabled:
+            for req in ev.finished:
+                self._finish_obs(req, d.iid)
         d.running = False
         self._kick_decode(d)
+
+    def _finish_obs(self, req: Request, iid: str) -> None:
+        """Terminal-success observability: close the request's span
+        chain (decode_queued → decode → ``finished`` instant) and feed
+        the latency histograms."""
+        tr = self.tracer
+        if tr is not None:
+            if req.t_transfer_done >= 0 and req.t_decode_start >= 0:
+                tr.span("decode_queued", iid, req.t_transfer_done,
+                        max(0.0, req.t_decode_start - req.t_transfer_done),
+                        rid=req.rid)
+            if req.t_decode_start >= 0:
+                tr.span("decode", iid, req.t_decode_start,
+                        max(0.0, self._now - req.t_decode_start),
+                        rid=req.rid, generated=req.generated)
+            tr.instant("finished", iid, self._now, rid=req.rid)
+        observe_request(self.metrics, req)
 
     def _stream(self, rid: str, tok: int) -> None:
         buf = self._buffers.get(rid)
@@ -773,6 +865,12 @@ class Cluster:
                         and not inst.running):
                     inst.flip.drained(self._now)
             if inst.flip.maybe_complete(self._now):
+                if self.tracer is not None:
+                    self.tracer.instant("flip_complete", inst.iid,
+                                        self._now,
+                                        role=inst.flip.role.value)
+                if self.metrics.enabled:
+                    self.metrics.counter("flips").inc()
                 # newly active in the flipped role
                 self._rebuild_role_index()
                 if inst.flip.role == Role.PREFILL:
@@ -799,9 +897,15 @@ class Cluster:
                 continue
             if inst.flip.role == Role.PREFILL and decode_backlog > 0:
                 inst.flip.begin_flip()
+                if self.tracer is not None:
+                    self.tracer.instant("flip_begin", inst.iid,
+                                        self._now, to="decode")
             elif inst.flip.role == Role.DECODE and prefill_backlog > 0 \
                     and len(self._decodes()) > 1:
                 inst.flip.begin_flip()
+                if self.tracer is not None:
+                    self.tracer.instant("flip_begin", inst.iid,
+                                        self._now, to="prefill")
 
     def _route_pending(self):
         # stashed fully-prefilled requests first: once a decode instance
@@ -837,8 +941,10 @@ class Cluster:
             self._kick_prefill(p)
         self._pending_arrivals = []
 
-    def _snapshot(self) -> Dict[str, dict]:
-        """Per-instance state for ``ClusterStallError`` diagnostics."""
+    def _instance_stats(self) -> Dict[str, dict]:
+        """Per-instance state — the ``"instances"`` pull-probe on
+        ``self.metrics`` and (through it) the ``ClusterStallError``
+        snapshot; one source of truth for both."""
         snap: Dict[str, dict] = {}
         for i in self.instances:
             load = i.decode_load()
@@ -882,6 +988,17 @@ class Cluster:
         for p in self._prefills():
             self.monitor.report_prefill(
                 p.iid, p.prefill_queued_tokens(), self._now)
+        if self.tracer is not None:
+            for i in self.instances:
+                if i.iid in self._dead:
+                    continue
+                load = i.decode_load()
+                self.tracer.counter(
+                    "load", i.iid, self._now,
+                    prefill_queued_tokens=i.prefill_queued_tokens(),
+                    decode_queued=load.get("queued", 0),
+                    decode_batch=load.get("batch", 0),
+                    free_pages=load.get("free_pages", 0))
         self._maybe_flip()
         self._route_pending()
         busy_any = any(not i.idle() or i.running for i in self.instances
@@ -902,10 +1019,14 @@ class Cluster:
             if not self._events:
                 self._stall_ticks += 1
                 if self._stall_ticks > 10_000:
+                    if self.tracer is not None:
+                        self.tracer.instant("stall", "cluster",
+                                            self._now)
                     raise ClusterStallError(
                         "cluster stalled: instances hold queued work "
                         "but no event can make progress (pool too "
-                        "small for a request?)", self._snapshot())
+                        "small for a request?)",
+                        self.metrics.probe("instances"))
             else:
                 self._stall_ticks = 0
         else:

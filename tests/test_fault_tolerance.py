@@ -170,7 +170,11 @@ def test_sim_permanent_drop_exhausts_retry_budget(opt13b):
                       faults=FaultSpec(drop_kv=1.0), recovery=policy)
     reqs = generate("LPLD", 4, seed=2)
     r = cluster.serve(copy.deepcopy(reqs))
-    assert r.metrics == {"n": 0, "failed": 4}
+    assert r.metrics["n"] == 0 and r.metrics["failed"] == 4
+    # the all-failed summary keeps its diagnostics: every request
+    # prefilled (so it has a TTFT) and burned its full retry budget
+    assert r.metrics["failed_avg_ttft"] > 0
+    assert r.metrics["failed_retries"] == 4 * (policy.max_retries + 1)
     for req in r.requests:
         assert req.phase == Phase.FAILED
         assert "retry budget" in req.error

@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Validate trace artifacts emitted by the observability plane
+(repro.obs — docs/observability.md).
+
+Checks, per file (format auto-detected by extension, or forced with
+--format):
+
+  * ``.jsonl``  — record schema (meta header, span/instant/counter
+    shapes, non-negative ts/dur) AND span-chain liveness: every rid
+    that appears must reach exactly one terminal instant
+    (finished/cancelled/failed) — zero orphan spans;
+  * ``.json``   — Chrome/Perfetto ``trace_event`` document structure
+    (ph kinds, pid/tid/ts presence, X durations, instant scopes,
+    metadata args).
+
+``--selftest`` runs a tiny numpy-only sim-cluster chaos scenario
+(crash + dropped transfers), exports both formats, and validates them
+round-trip — the CI docs job runs this so the trace schema, the
+exporters and this validator can never drift apart.
+
+    python tools/check_trace.py TRACE_chaos.json trace.jsonl
+    python tools/check_trace.py --selftest
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import (read_jsonl, validate_chains,  # noqa: E402
+                       validate_jsonl_records, validate_perfetto)
+
+
+def check_file(path: str, fmt: Optional[str] = None) -> List[str]:
+    """Validate one trace artifact; returns a list of problems."""
+    if fmt is None:
+        fmt = "jsonl" if path.endswith(".jsonl") else "perfetto"
+    if fmt == "jsonl":
+        try:
+            records = read_jsonl(path)
+        except (OSError, json.JSONDecodeError) as e:
+            return [f"cannot read JSONL: {e}"]
+        return validate_jsonl_records(records) + validate_chains(records)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot read JSON: {e}"]
+    return validate_perfetto(doc)
+
+
+def selftest() -> List[str]:
+    """Emit a chaos trace from the numpy-only sim runtime and validate
+    the round-trip through both exporters."""
+    import copy
+    import tempfile
+
+    from repro.configs import get_config
+    from repro.obs import Tracer
+    from repro.runtime.costmodel import CostModel, HardwareSpec
+    from repro.runtime.workload import generate
+    from repro.serving import Cluster, FaultEvent, FaultSpec
+    from repro.serving.faults import CRASH
+
+    cfg = get_config("opt_13b")
+    cost = CostModel(cfg, HardwareSpec.v100_tp2(),
+                     n_params=13_000_000_000)
+    reqs = generate("Mixed", 32, seed=1)
+    tracer = Tracer()
+    faults = FaultSpec(seed=0, drop_kv=0.1, events=(
+        FaultEvent(t=2.0, kind=CRASH, iid="i3"),))
+    Cluster(cfg, runtime="sim", cost=cost, n_prefill=2, n_decode=2,
+            faults=faults, tracer=tracer).serve(copy.deepcopy(reqs))
+    if not tracer.events:
+        return ["selftest produced an empty trace"]
+
+    errs: List[str] = []
+    with tempfile.TemporaryDirectory() as d:
+        jsonl = os.path.join(d, "trace.jsonl")
+        perfetto = os.path.join(d, "trace.json")
+        tracer.write_jsonl(jsonl)
+        tracer.write_perfetto(perfetto)
+        errs += [f"jsonl: {e}" for e in check_file(jsonl)]
+        errs += [f"perfetto: {e}" for e in check_file(perfetto)]
+    # the chaos scenario must actually exercise the recovery events
+    names = {ev["name"] for ev in tracer.events}
+    for required in ("prefill", "transfer", "decode", "finished",
+                     "crash", "declared_dead", "recovery", "retransmit"):
+        if required not in names:
+            errs.append(f"selftest trace missing {required!r} events")
+    return errs
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", help="trace files to validate")
+    ap.add_argument("--format", choices=["jsonl", "perfetto"],
+                    default=None,
+                    help="force a format instead of guessing by "
+                         "extension")
+    ap.add_argument("--selftest", action="store_true",
+                    help="emit a sim-cluster chaos trace and validate "
+                         "the round-trip (numpy-only)")
+    args = ap.parse_args(argv)
+
+    if not args.paths and not args.selftest:
+        ap.error("give trace files and/or --selftest")
+
+    failures = 0
+    if args.selftest:
+        errs = selftest()
+        for e in errs:
+            print(f"selftest: {e}")
+        print("selftest: " + ("FAIL" if errs else "OK"))
+        failures += len(errs)
+    for path in args.paths:
+        errs = check_file(path, args.format)
+        for e in errs:
+            print(f"{path}: {e}")
+        print(f"{path}: " + ("FAIL" if errs else "OK"))
+        failures += len(errs)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
